@@ -1,0 +1,186 @@
+"""Shared benchmark harness for the paper's figures (§5).
+
+Methodology follows [39]/the paper: pre-fill the structure, run a timed
+mixed workload from N threads, report throughput (Mops/s) and the average
+number of unreclaimed objects per operation.  Scaled down for this host
+(Python threads under the GIL; 1 CPU core): per-point duration is ~0.4 s
+and thread counts are small — ABSOLUTE numbers are not comparable to the
+paper's C++; EXPERIMENTS.md validates the paper's *relative* claims.
+
+Tunables mirror the paper: epoch/era increment frequency ``era_freq``
+(paper: n·v with v=150), cleanup frequency (paper: >=30),
+``max_attempts=16`` on WFE's fast path.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core import SCHEMES, make_scheme
+from repro.core.datastructures import (CRTurnQueue, HarrisMichaelList,
+                                       KPQueue, MichaelHashMap, NatarajanBST,
+                                       TreiberStack)
+
+DEFAULT_SCHEMES = ("WFE", "HE", "HP", "EBR", "2GEIBR", "Leak")
+QUEUE_SCHEMES = DEFAULT_SCHEMES
+
+STRUCTS = {
+    "list": HarrisMichaelList,
+    "hashmap": MichaelHashMap,
+    "bst": NatarajanBST,
+    "stack": TreiberStack,
+    "kpqueue": KPQueue,
+    "crturnqueue": CRTurnQueue,
+}
+
+
+def scheme_kwargs(name: str, n_threads: int, v: int = 30) -> dict:
+    if name in ("WFE", "HE"):
+        return {"era_freq": max(1, n_threads * v // 10),
+                "cleanup_freq": 30}
+    if name in ("EBR", "2GEIBR"):
+        return {"epoch_freq": max(1, n_threads * v // 10),
+                "cleanup_freq": 30}
+    if name in ("HP",):
+        return {"cleanup_freq": 30}
+    return {}
+
+
+def run_kv_workload(struct: str, scheme: str, n_threads: int, *,
+                    duration: float = 0.4, get_ratio: float = 0.5,
+                    prefill: int = 2000, key_range: int = 4000,
+                    seed: int = 0) -> Dict[str, float]:
+    """Mixed insert/delete/get workload on a key-value structure."""
+    smr = make_scheme(scheme, max_threads=n_threads + 1,
+                      **scheme_kwargs(scheme, n_threads))
+    ds = STRUCTS[struct](smr)
+    tid0 = smr.register_thread()
+    rng = random.Random(seed)
+    for _ in range(prefill):
+        ds.insert(rng.randrange(key_range), "v", tid0)
+
+    ops = [0] * n_threads
+    unreclaimed_samples: List[int] = []
+    stop = threading.Event()
+    start = threading.Barrier(n_threads + 1)
+
+    def worker(w: int) -> None:
+        tid = smr.register_thread()
+        r = random.Random(seed * 997 + w)
+        start.wait()
+        n = 0
+        while not stop.is_set():
+            key = r.randrange(key_range)
+            p = r.random()
+            if p < get_ratio:
+                ds.get(key, tid)
+            elif p < get_ratio + (1 - get_ratio) / 2:
+                ds.insert(key, "v", tid)
+            else:
+                ds.delete(key, tid)
+            n += 1
+        ops[w] = n
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(n_threads)]
+    for t in threads:
+        t.start()
+    start.wait()
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < duration:
+        unreclaimed_samples.append(smr.unreclaimed())
+        time.sleep(duration / 10)
+    stop.set()
+    for t in threads:
+        t.join()
+    elapsed = time.monotonic() - t0
+    total = sum(ops)
+    return {
+        "scheme": scheme, "struct": struct, "threads": n_threads,
+        "mops": total / elapsed / 1e6,
+        "ops": total,
+        "avg_unreclaimed": (sum(unreclaimed_samples)
+                            / max(len(unreclaimed_samples), 1)),
+        "unreclaimed_per_op": (sum(unreclaimed_samples)
+                               / max(len(unreclaimed_samples), 1))
+        / max(total, 1),
+        **smr.stats(),
+    }
+
+
+def run_queue_workload(struct: str, scheme: str, n_threads: int, *,
+                       duration: float = 0.4, prefill: int = 512,
+                       seed: int = 0) -> Dict[str, float]:
+    """50% enqueue / 50% dequeue (the paper's queue test, Fig. 5)."""
+    smr = make_scheme(scheme, max_threads=n_threads + 1,
+                      **scheme_kwargs(scheme, n_threads))
+    ds = STRUCTS[struct](smr)
+    tid0 = smr.register_thread()
+    for i in range(prefill):
+        ds.enqueue(i, tid0)
+
+    ops = [0] * n_threads
+    unreclaimed_samples: List[int] = []
+    stop = threading.Event()
+    start = threading.Barrier(n_threads + 1)
+
+    def worker(w: int) -> None:
+        tid = smr.register_thread()
+        r = random.Random(seed * 31 + w)
+        start.wait()
+        n = 0
+        while not stop.is_set():
+            if r.random() < 0.5:
+                ds.enqueue(n, tid)
+            else:
+                ds.dequeue(tid)
+            n += 1
+        ops[w] = n
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(n_threads)]
+    for t in threads:
+        t.start()
+    start.wait()
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < duration:
+        unreclaimed_samples.append(smr.unreclaimed())
+        time.sleep(duration / 10)
+    stop.set()
+    for t in threads:
+        t.join()
+    elapsed = time.monotonic() - t0
+    total = sum(ops)
+    return {
+        "scheme": scheme, "struct": struct, "threads": n_threads,
+        "mops": total / elapsed / 1e6,
+        "ops": total,
+        "avg_unreclaimed": (sum(unreclaimed_samples)
+                            / max(len(unreclaimed_samples), 1)),
+        "unreclaimed_per_op": (sum(unreclaimed_samples)
+                               / max(len(unreclaimed_samples), 1))
+        / max(total, 1),
+        **smr.stats(),
+    }
+
+
+def sweep(runner: Callable, struct: str, *, threads=(1, 2, 4),
+          schemes=DEFAULT_SCHEMES, **kw) -> List[Dict]:
+    rows = []
+    for scheme in schemes:
+        for n in threads:
+            rows.append(runner(struct, scheme, n, **kw))
+    return rows
+
+
+def print_table(title: str, rows: List[Dict]) -> None:
+    print(f"\n### {title}")
+    print(f"{'scheme':>8s} {'thr':>4s} {'Mops/s':>9s} {'unreclaimed':>12s} "
+          f"{'frees':>9s} {'retires':>9s}")
+    for r in rows:
+        print(f"{r['scheme']:>8s} {r['threads']:>4d} {r['mops']:>9.4f} "
+              f"{r['avg_unreclaimed']:>12.1f} {r.get('frees', 0):>9d} "
+              f"{r.get('retires', 0):>9d}")

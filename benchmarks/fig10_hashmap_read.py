@@ -1,0 +1,14 @@
+"""Paper Figure 10: hash map, 90% get / 10% put."""
+
+from .common import print_table, run_kv_workload, sweep
+
+
+def run(duration: float = 0.4, threads=(1, 2, 4)):
+    rows = sweep(run_kv_workload, "hashmap", threads=threads,
+                 duration=duration, get_ratio=0.9)
+    print_table("Fig.10 Hash Map (90% get / 10% put)", rows)
+    return {"hashmap_read": rows}
+
+
+if __name__ == "__main__":
+    run()

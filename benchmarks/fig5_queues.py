@@ -1,0 +1,17 @@
+"""Paper Figure 5: wait-free queues (KP + CRTurn), 50% enqueue/dequeue."""
+
+from .common import QUEUE_SCHEMES, print_table, run_queue_workload, sweep
+
+
+def run(duration: float = 0.4, threads=(1, 2, 4)):
+    out = {}
+    for q in ("kpqueue", "crturnqueue"):
+        rows = sweep(run_queue_workload, q, threads=threads,
+                     schemes=QUEUE_SCHEMES, duration=duration)
+        print_table(f"Fig.5 {q} (50/50 enqueue/dequeue)", rows)
+        out[q] = rows
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,15 @@
+"""Paper Figure 6: Harris-Michael linked list, 50% insert / 50% delete."""
+
+from .common import print_table, run_kv_workload, sweep
+
+
+def run(duration: float = 0.4, threads=(1, 2, 4)):
+    rows = sweep(run_kv_workload, "list", threads=threads,
+                 duration=duration, get_ratio=0.0,
+                 prefill=500, key_range=1000)
+    print_table("Fig.6 Linked List (50% insert / 50% delete)", rows)
+    return {"list_write": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,14 @@
+"""Paper Figure 7: Michael hash map, 50% insert / 50% delete."""
+
+from .common import print_table, run_kv_workload, sweep
+
+
+def run(duration: float = 0.4, threads=(1, 2, 4)):
+    rows = sweep(run_kv_workload, "hashmap", threads=threads,
+                 duration=duration, get_ratio=0.0)
+    print_table("Fig.7 Hash Map (50% insert / 50% delete)", rows)
+    return {"hashmap_write": rows}
+
+
+if __name__ == "__main__":
+    run()

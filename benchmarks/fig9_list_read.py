@@ -1,0 +1,15 @@
+"""Paper Figure 9: linked list, 90% get / 10% put."""
+
+from .common import print_table, run_kv_workload, sweep
+
+
+def run(duration: float = 0.4, threads=(1, 2, 4)):
+    rows = sweep(run_kv_workload, "list", threads=threads,
+                 duration=duration, get_ratio=0.9,
+                 prefill=500, key_range=1000)
+    print_table("Fig.9 Linked List (90% get / 10% put)", rows)
+    return {"list_read": rows}
+
+
+if __name__ == "__main__":
+    run()

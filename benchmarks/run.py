@@ -1,0 +1,63 @@
+"""Aggregate benchmark entry point: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # full sweep
+  PYTHONPATH=src python -m benchmarks.run --quick    # CI-speed subset
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter durations / fewer thread counts")
+    ap.add_argument("--json", default=None, help="dump results as JSON")
+    args = ap.parse_args(argv)
+
+    duration = 0.15 if args.quick else 0.4
+    threads = (1, 2) if args.quick else (1, 2, 4)
+
+    from . import (fig5_queues, fig6_list, fig7_hashmap, fig8_bst,
+                   fig9_list_read, fig10_hashmap_read, fig11_bst_read,
+                   kernel_bench, serve_bench, unreclaimed)
+
+    t0 = time.time()
+    results = {}
+    print("=" * 72)
+    print("WFE reproduction benchmarks (paper §5 figures, scaled for this "
+          "host)")
+    print("=" * 72)
+    results["fig5"] = fig5_queues.run(duration=duration, threads=threads)
+    results["fig6"] = fig6_list.run(duration=duration, threads=threads)
+    results["fig7"] = fig7_hashmap.run(duration=duration, threads=threads)
+    results["fig8"] = fig8_bst.run(duration=duration, threads=threads)
+    results["fig9"] = fig9_list_read.run(duration=duration, threads=threads)
+    results["fig10"] = fig10_hashmap_read.run(duration=duration,
+                                              threads=threads)
+    results["fig11"] = fig11_bst_read.run(duration=duration, threads=threads)
+    results["unreclaimed"] = unreclaimed.run()
+    results["kernels"] = kernel_bench.run()
+    results["serve"] = serve_bench.run()
+    print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+
+    # headline validation of the paper's relative claims (EXPERIMENTS.md)
+    ok = True
+    un = results["unreclaimed"]
+    if not (un["WFE"]["bounded"] and un["HE"]["bounded"]
+            and not un["EBR"]["bounded"]):
+        print("WARN: boundedness claims not reproduced"); ok = False
+    print("relative-claims check:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""Serving-engine benchmark: WFE pool vs other SMR schemes under the
+continuous-batching engine (the paper's technique in its integrated home).
+
+Measures scheduler-side tail latencies of tick() (admission+alloc+protect)
+— the operations the paper makes wait-free — plus end-to-end tokens/s of
+the engine on a reduced dense model.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+
+def run(n_requests: int = 12, new_tokens: int = 8):
+    cfg = get_smoke_config("stablelm-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    out = {}
+    print("\n### Serving engine: scheduler-op latency + throughput by scheme")
+    print(f"{'scheme':>8s} {'tok/s':>8s} {'tick p50 us':>12s} "
+          f"{'tick p99 us':>12s} {'unreclaimed':>12s} {'slow paths':>11s}")
+    for scheme in ("WFE", "HE", "EBR", "2GEIBR"):
+        engine = ServeEngine(cfg, params, n_blocks=64, block_size=4,
+                             max_batch=8, scheme=scheme,
+                             era_freq=4, cleanup_freq=4)
+        tid = engine.pool.register_thread()
+        for i in range(n_requests):
+            engine.submit([1 + i % 7, 2, 3], new_tokens)
+        tick_times = []
+        tokens = 0
+        t0 = time.perf_counter()
+        while True:
+            t1 = time.perf_counter()
+            plan = engine.sched.tick(tid)
+            tick_times.append(time.perf_counter() - t1)
+            if plan is None:
+                if not engine.sched.active and not engine.sched.queue:
+                    break
+                continue
+            import jax.numpy as jnp
+            logits, engine.pools = engine._step(
+                engine.params, engine.pools, jnp.asarray(plan.tables),
+                jnp.asarray(plan.lengths), jnp.asarray(plan.tokens),
+                jnp.asarray(plan.positions))
+            sampled = np.asarray(jnp.argmax(logits, axis=-1))
+            engine.sched.complete(plan, sampled, tid)
+            tokens += len(plan.requests)
+        dt = time.perf_counter() - t0
+        for _ in range(32):
+            engine.pool.cleanup(tid)
+        ticks_us = np.array(tick_times) * 1e6
+        stats = engine.pool.smr.stats()
+        row = {
+            "tok_s": tokens / dt,
+            "tick_p50_us": float(np.percentile(ticks_us, 50)),
+            "tick_p99_us": float(np.percentile(ticks_us, 99)),
+            "unreclaimed": stats["unreclaimed"],
+            "slow_paths": stats.get("slow_paths", 0),
+        }
+        out[scheme] = row
+        print(f"{scheme:>8s} {row['tok_s']:>8.1f} "
+              f"{row['tick_p50_us']:>12.1f} {row['tick_p99_us']:>12.1f} "
+              f"{row['unreclaimed']:>12d} {row['slow_paths']:>11d}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,16 @@
+"""Paged KV-cache block pool with WFE reclamation (the paper's technique
+integrated as a first-class serving feature — DESIGN.md §2.1(A))."""
+
+from .block_pool import BlockPool, KVBlock, PoolExhausted
+from .block_table import BlockTableRef, TableVersion
+from .scheduler import Request, Scheduler
+
+__all__ = [
+    "BlockPool",
+    "BlockTableRef",
+    "KVBlock",
+    "PoolExhausted",
+    "Request",
+    "Scheduler",
+    "TableVersion",
+]

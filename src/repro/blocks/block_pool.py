@@ -1,0 +1,263 @@
+"""Era-stamped device block pool, reclaimed with the paper's WFE scheme.
+
+The SMR mapping (DESIGN.md §2.1):
+
+* **blocks** = fixed-size KV-cache pages in a device-resident pool; a
+  ``KVBlock`` is the reclamation header (paper Fig. 2's ``block header``)
+  carrying ``alloc_era``/``retire_era`` and the pool slot index;
+* **readers** = in-flight device steps: before dispatch, the scheduler
+  publishes ONE era reservation per step (``protect_step``) — an era
+  reservation covers *every* block whose lifetime spans it (this interval
+  property is exactly why Hazard Eras beats Hazard Pointers here: a step
+  touching 10k blocks needs one slot, not 10k);
+* **reclaimers** = scheduler threads retiring blocks on request
+  completion/eviction; WFE's wait-freedom bounds their latency
+  (``retire``/``alloc_block``/``get_protected`` are all wait-free bounded)
+  — a stalled completion thread can neither block admission nor make pool
+  memory unbounded;
+* ``cleanup()`` uses the vectorized era_scan (kernels/) when the retire
+  list is large: the paper's R×(T·H) interval scan is the reclamation hot
+  path and maps to a single VPU compare-reduce.
+
+Free-slot recycling is a Treiber stack of fresh cons cells (identity-CAS,
+so ABA-free in Python).  Note the paper's scope: *reclamation* is
+wait-free; free-list pop (allocation) is lock-free, same as malloc in the
+paper's own evaluation.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core import Block, make_scheme
+from repro.core.atomics import INF_ERA, AtomicRef, PtrView
+
+__all__ = ["KVBlock", "BlockPool", "PoolExhausted"]
+
+
+class PoolExhausted(RuntimeError):
+    """No free blocks even after reclamation — admission must back off."""
+
+
+class KVBlock(Block):
+    """Reclamation header for one pool slot (paper Fig. 2)."""
+
+    __slots__ = ("index", "on_free")
+
+    def __init__(self, index: int, on_free: Optional[Callable] = None):
+        super().__init__()
+        self.index = index
+        self.on_free = on_free
+
+    def _poison_payload(self) -> None:
+        # Returning the slot to the free list IS the poison: any later read
+        # through a stale table would observe recycled data in tests.
+        if self.on_free is not None:
+            self.on_free(self.index)
+            self.on_free = None
+
+
+class _Cell:
+    __slots__ = ("value", "next")
+
+    def __init__(self, value, nxt):
+        self.value = value
+        self.next = nxt
+
+
+class _FreeStack:
+    """Treiber stack of slot indices (fresh cells -> no ABA)."""
+
+    def __init__(self, values):
+        head = None
+        for v in values:
+            head = _Cell(v, head)
+        self._head = AtomicRef(head)
+        self._approx = len(list(values)) if not isinstance(values, range) else len(values)
+
+    def push(self, value) -> None:
+        while True:
+            h = self._head.load()
+            if self._head.cas(h, _Cell(value, h)):
+                return
+
+    def pop(self):
+        while True:
+            h = self._head.load()
+            if h is None:
+                return None
+            if self._head.cas(h, h.next):
+                return h.value
+
+
+class _EpochNode(Block):
+    """Never-retired anchor; get_protected on it publishes the current era."""
+
+    __slots__ = ()
+
+
+class BlockPool:
+    """WFE-managed pool of ``n_blocks`` KV pages.
+
+    The device arrays themselves (one (n_blocks, block_size, KH, D) pool per
+    layer) are owned by the serving engine; this class owns slot lifetime.
+    """
+
+    def __init__(self, n_blocks: int, *, scheme: str = "WFE",
+                 max_threads: int = 16, max_hes: int = 8, **smr_kwargs):
+        self.n_blocks = n_blocks
+        if scheme == "HP":
+            # the paper's motivating contrast: an HP slot protects ONE
+            # pointer, so a step snapshot naming thousands of blocks cannot
+            # be covered by one reservation — era/interval schemes can.
+            raise ValueError(
+                "Hazard Pointers cannot protect a step snapshot with one "
+                "reservation; use an era scheme (WFE/HE) or epoch scheme")
+        if scheme in ("WFE", "HE"):  # era-slot schemes
+            smr_kwargs = {"max_hes": max_hes, **smr_kwargs}
+        if scheme in ("EBR", "2GEIBR"):  # epoch-frequency naming differs
+            smr_kwargs = {("epoch_freq" if k == "era_freq" else k): v
+                          for k, v in smr_kwargs.items()}
+        self.smr = make_scheme(scheme, max_threads=max_threads, **smr_kwargs)
+        self._free = _FreeStack(range(n_blocks - 1, -1, -1))
+        self._free_count = n_blocks  # advisory (racy) gauge
+        self._lock_gauge = threading.Lock()
+        # step-epoch anchor: one reservation protects a whole dispatched step
+        self._epoch_ref = AtomicRef(_EpochNode())
+        self._epoch_view = PtrView(self._epoch_ref)
+
+    # ---------------------------------------------------------- threads
+    def register_thread(self) -> int:
+        return self.smr.register_thread()
+
+    # ---------------------------------------------------------- allocation
+    def alloc(self, tid: int) -> KVBlock:
+        """Wait-free-reclaimed allocation of one pool slot."""
+        idx = self._free.pop()
+        if idx is None:
+            # drain our own retire list, then retry once
+            self.cleanup(tid)
+            idx = self._free.pop()
+            if idx is None:
+                raise PoolExhausted(
+                    f"pool of {self.n_blocks} blocks exhausted")
+        blk = self.smr.alloc_block(KVBlock, tid, idx, self._on_free)
+        with self._lock_gauge:
+            self._free_count -= 1
+        return blk
+
+    def _on_free(self, index: int) -> None:
+        self._free.push(index)
+        with self._lock_gauge:
+            self._free_count += 1
+
+    def retire(self, blk: KVBlock, tid: int) -> None:
+        self.smr.retire(blk, tid)
+
+    # ---------------------------------------------------------- protection
+    def protect_step(self, slot: int, tid: int) -> None:
+        """Publish an era reservation covering every block alive now.
+
+        Call before dispatching a device step; the returned reservation
+        guards all pool slots named by any block table snapshot read AFTER
+        this call (interval property, DESIGN.md §2.1).
+        """
+        self.smr.get_protected(self._epoch_view, slot, tid)
+
+    def release_step(self, slot: int, tid: int) -> None:
+        """Clear one step's reservation (device step completed)."""
+        # Per-slot clear: write the empty value for this scheme's slot kind
+        # (WFE: (era, tag) pair keeps its tag; HE: era int; HP: pointer).
+        smr = self.smr
+        if not hasattr(smr, "reservations"):
+            smr.end_op(tid)  # EBR-style schemes have no per-slot state
+            return
+        row = smr.reservations[tid][slot]
+        if hasattr(row, "store_a"):  # WFE (era, tag) pair
+            row.store_a(INF_ERA)
+        elif smr.name in ("HE", "2GEIBR"):  # era/epoch integer slot
+            row.store(INF_ERA)
+        else:  # HP-style pointer slot
+            row.store(None)
+
+    # ---------------------------------------------------------- reclamation
+    def cleanup(self, tid: int, *, vectorized_threshold: int = 64,
+                use_kernel: bool = False) -> None:
+        """Drain this thread's retire list.
+
+        Large lists take the vectorized era_scan path (the Pallas hot spot);
+        it preserves WFE's Theorem-4 scan order by running the segment scans
+        in the same sequence as the scalar cleanup().
+        """
+        smr = self.smr
+        lst = smr.retire_lists[tid]
+        # the vectorized scan encodes WFE's reservation layout (normal +
+        # two special slots + helping counters); other schemes take their
+        # own scalar cleanup
+        if len(lst) < vectorized_threshold or smr.name != "WFE":
+            smr.flush(tid)
+            return
+        self._cleanup_vectorized(tid, use_kernel)
+
+    def _cleanup_vectorized(self, tid: int, use_kernel: bool) -> None:
+        from repro.kernels import can_delete_blocks
+        from repro.kernels.ref import INF_ERA32
+
+        smr = self.smr
+        lst = smr.retire_lists[tid]
+        blocks = list(lst)
+        alloc = np.array([b.alloc_era for b in blocks], np.int64)
+        retire = np.array([b.retire_era for b in blocks], np.int64)
+        mh = smr.max_hes
+
+        def snapshot(js, je):
+            rows = []
+            for i in range(smr.max_threads):
+                row = []
+                for j in range(js, je):
+                    era = smr.reservations[i][j].load_a()
+                    row.append(INF_ERA32 if era == INF_ERA else int(era))
+                rows.append(row)
+            return np.array(rows, np.int64)
+
+        def clip(x):
+            return np.minimum(x, INF_ERA32 - 1).astype(np.int32)
+
+        # Theorem 4 scan order: normal -> special1; if any slow path is
+        # active also special2 -> normal again.
+        ce = smr.counter_end.load()
+        ok = np.array(can_delete_blocks(
+            clip(alloc), clip(retire), snapshot(0, mh),
+            use_kernel=use_kernel))
+        ok &= np.asarray(can_delete_blocks(
+            clip(alloc), clip(retire), snapshot(mh, mh + 1),
+            use_kernel=use_kernel))
+        if ce != smr.counter_start.load():
+            ok &= np.asarray(can_delete_blocks(
+                clip(alloc), clip(retire), snapshot(mh + 1, mh + 2),
+                use_kernel=use_kernel))
+            ok &= np.asarray(can_delete_blocks(
+                clip(alloc), clip(retire), snapshot(0, mh),
+                use_kernel=use_kernel))
+        remaining = []
+        for blk, deletable in zip(blocks, ok):
+            if deletable:
+                smr.free(blk, tid)
+            else:
+                remaining.append(blk)
+        lst[:] = remaining
+
+    # ---------------------------------------------------------- metrics
+    @property
+    def free_blocks(self) -> int:
+        return self._free_count
+
+    def stats(self) -> dict:
+        s = self.smr.stats()
+        s["free_blocks"] = self._free_count
+        s["n_blocks"] = self.n_blocks
+        return s
+

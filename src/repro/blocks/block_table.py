@@ -1,0 +1,73 @@
+"""Versioned per-request block tables.
+
+A request's block table is itself an SMR-managed node (``TableVersion``):
+appending a block publishes a NEW version and *retires* the old one — the
+exact linked-structure update pattern the paper's ``get_protected`` protects
+(readers may hold a stale version; the version node cannot be reclaimed
+while any in-flight step's era reservation covers it, and the block ids it
+names stay valid because the blocks' retire eras are >= that reservation).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.core import Block
+from repro.core.atomics import AtomicRef, PtrView
+
+from .block_pool import BlockPool, KVBlock
+
+__all__ = ["TableVersion", "BlockTableRef"]
+
+
+class TableVersion(Block):
+    """Immutable snapshot of a request's block list (paper Fig. 2 node)."""
+
+    __slots__ = ("blocks",)
+
+    def __init__(self, blocks: Tuple[KVBlock, ...]):
+        super().__init__()
+        self.blocks = blocks
+
+    def _poison_payload(self) -> None:
+        self.blocks = None  # loud use-after-free in tests
+
+    @property
+    def block_ids(self) -> Tuple[int, ...]:
+        return tuple(b.index for b in self.blocks)
+
+
+class BlockTableRef:
+    """The mutable cell holding the current TableVersion for one request."""
+
+    def __init__(self, pool: BlockPool, tid: int):
+        self._pool = pool
+        empty = pool.smr.alloc_block(TableVersion, tid, ())
+        self._ref = AtomicRef(empty)
+        self.view = PtrView(self._ref)
+
+    def current(self) -> TableVersion:
+        return self._ref.load()
+
+    def append_block(self, tid: int) -> KVBlock:
+        """Allocate a pool block and publish a new table version."""
+        blk = self._pool.alloc(tid)
+        old = self._ref.load()
+        new = self._pool.smr.alloc_block(
+            TableVersion, tid, old.blocks + (blk,))
+        self._ref.store(new)  # single writer per request (the scheduler)
+        self._pool.smr.retire(old, tid)
+        return blk
+
+    def release_all(self, tid: int) -> None:
+        """Retire every block + the table itself (request finished/evicted)."""
+        old = self._ref.load()
+        empty = self._pool.smr.alloc_block(TableVersion, tid, ())
+        self._ref.store(empty)
+        for blk in old.blocks:
+            self._pool.retire(blk, tid)
+        self._pool.smr.retire(old, tid)
+
+    def __len__(self) -> int:
+        cur = self._ref.load()
+        return len(cur.blocks) if cur.blocks is not None else 0

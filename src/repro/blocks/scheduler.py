@@ -1,0 +1,204 @@
+"""Wait-free continuous-batching scheduler over the WFE block pool.
+
+The serving control plane (vLLM-style), with the paper's progress guarantee
+where it matters: admission, block allocation, retirement and step
+protection are all wait-free-bounded WFE operations, so
+
+* a stalled completion thread cannot block admission (no lock couples them);
+* eviction under pool pressure has bounded latency (``retire`` is
+  wait-free) — the deadline-based batch cutoff below is therefore a real
+  bound, not best-effort;
+* in-flight device steps (dispatched asynchronously, possibly several deep)
+  keep their block-table snapshots readable until completion via one era
+  reservation per step (``protect_step``).
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .block_pool import BlockPool, PoolExhausted
+from .block_table import BlockTableRef
+
+__all__ = ["Request", "StepPlan", "Scheduler"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    table: Optional[BlockTableRef] = None
+    length: int = 0  # tokens materialized in the cache
+    state: str = "queued"  # queued | active | done | evicted
+    evictions: int = 0
+
+    @property
+    def next_token(self) -> int:
+        """Token to feed at the next step (teacher-forced prompt, then gen)."""
+        if self.length < len(self.prompt):
+            return self.prompt[self.length]
+        return self.generated[-1]
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclass
+class StepPlan:
+    """Immutable snapshot handed to the device step."""
+
+    slot: int  # era-reservation slot guarding this step
+    requests: List[Request]
+    tokens: np.ndarray  # (B,) int32
+    positions: np.ndarray  # (B,) int32
+    tables: np.ndarray  # (B, nblk) int32, padded with 0
+    lengths: np.ndarray  # (B,) int32 — context length INCLUDING this token
+
+
+class Scheduler:
+    def __init__(self, pool: BlockPool, *, block_size: int, max_batch: int,
+                 max_inflight: int = 4, deadline_ms: float = 50.0):
+        self.pool = pool
+        self.block_size = block_size
+        self.max_batch = max_batch
+        self.max_inflight = max_inflight
+        self.deadline_ms = deadline_ms
+        self.queue: deque = deque()
+        self.active: List[Request] = []
+        self._qlock = threading.Lock()
+        self._rid = itertools.count()
+        self._slots = deque(range(max_inflight))
+        self.stats: Dict[str, int] = {
+            "admitted": 0, "completed": 0, "evictions": 0, "steps": 0,
+            "deadline_cutoffs": 0,
+        }
+
+    # --------------------------------------------------------------- intake
+    def submit(self, prompt: List[int], max_new_tokens: int) -> Request:
+        req = Request(next(self._rid), list(prompt), max_new_tokens)
+        with self._qlock:
+            self.queue.append(req)
+        return req
+
+    # --------------------------------------------------------------- tick
+    def tick(self, tid: int) -> Optional[StepPlan]:
+        """Build one decode step.  Returns None when nothing is runnable."""
+        t0 = time.monotonic()
+        deadline = t0 + self.deadline_ms / 1e3
+
+        # admit
+        while len(self.active) < self.max_batch:
+            with self._qlock:
+                if not self.queue:
+                    break
+                req = self.queue.popleft()
+            if req.table is None:
+                req.table = BlockTableRef(self.pool, tid)
+            req.state = "active"
+            self.active.append(req)
+            self.stats["admitted"] += 1
+            if time.monotonic() > deadline:
+                # straggler mitigation: cut the batch, run what we have
+                self.stats["deadline_cutoffs"] += 1
+                break
+
+        if not self.active:
+            return None
+        if not self._slots:
+            return None  # all in-flight slots busy; caller completes first
+
+        # ensure block capacity for one more token per request.  Priority is
+        # admission order (FCFS): under pool pressure the NEWEST request is
+        # preempted (vLLM-style LIFO preemption), so the oldest request
+        # makes monotonic progress — no eviction livelock.
+        runnable: List[Request] = []
+        for req in list(self.active):
+            if req.state != "active":
+                continue  # evicted earlier in this loop
+            if req.length % self.block_size == 0:  # needs a fresh block
+                got = False
+                while not got:
+                    try:
+                        req.table.append_block(tid)
+                        got = True
+                    except PoolExhausted:
+                        victim = self._pick_victim(exclude=req)
+                        if victim is None:
+                            break  # req is the newest; it waits this tick
+                        if victim in runnable:
+                            runnable.remove(victim)
+                        self._evict(victim, tid)
+                if not got:
+                    continue
+            runnable.append(req)
+        if not runnable:
+            return None
+
+        slot = self._slots.popleft()
+        # ORDER MATTERS (Lemma 4 discipline): publish the era reservation
+        # FIRST, then snapshot tables — everything read after the publish is
+        # covered by the reservation's era.
+        self.pool.protect_step(slot, tid)
+
+        b = len(runnable)
+        nblk = max(len(r.table) for r in runnable)
+        tables = np.zeros((b, nblk), np.int32)
+        tokens = np.zeros((b,), np.int32)
+        positions = np.zeros((b,), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        for i, req in enumerate(runnable):
+            snap = req.table.current()  # protected snapshot
+            ids = snap.block_ids
+            tables[i, : len(ids)] = ids
+            tokens[i] = req.next_token
+            positions[i] = req.length
+            lengths[i] = req.length + 1
+        self.stats["steps"] += 1
+        return StepPlan(slot, runnable, tokens, positions, tables, lengths)
+
+    # --------------------------------------------------------------- complete
+    def complete(self, plan: StepPlan, sampled: np.ndarray, tid: int) -> None:
+        """Account one finished device step; release its reservation."""
+        for req, tok in zip(plan.requests, sampled):
+            req.length += 1
+            # the step that consumed the last prompt token produces the
+            # first generated token
+            if req.length >= len(req.prompt):
+                req.generated.append(int(tok))
+            if req.done:
+                req.state = "done"
+                req.table.release_all(tid)
+                self.active.remove(req)
+                self.stats["completed"] += 1
+        self.pool.release_step(plan.slot, tid)
+        self._slots.append(plan.slot)
+        self.pool.cleanup(tid)
+
+    # --------------------------------------------------------------- evict
+    def _pick_victim(self, exclude: Request) -> Optional[Request]:
+        """LIFO preemption: the newest admission yields (vLLM policy)."""
+        if self.active and self.active[-1] is not exclude:
+            return self.active[-1]
+        return None
+
+    def _evict(self, req: Request, tid: int) -> None:
+        req.table.release_all(tid)
+        req.length = 0
+        req.generated.clear()
+        req.state = "queued"
+        req.evictions += 1
+        self.active.remove(req)
+        with self._qlock:
+            self.queue.append(req)
+        self.stats["evictions"] += 1
+        self.pool.cleanup(tid)

@@ -1,0 +1,62 @@
+"""Assigned-architecture registry: --arch <id> resolves here."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.common import ArchConfig
+
+from .shapes import SHAPES, ShapeSpec, cell_is_runnable
+
+_MODULES = {
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "stablelm-3b": "stablelm_3b",
+    "starcoder2-3b": "starcoder2_3b",
+    "starcoder2-7b": "starcoder2_7b",
+    "gemma-7b": "gemma_7b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "xlstm-350m": "xlstm_350m",
+    "pixtral-12b": "pixtral_12b",
+    "whisper-small": "whisper_small",
+}
+
+ALL_ARCHS = tuple(_MODULES)
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise ValueError(f"unknown arch {name!r}; one of {ALL_ARCHS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ArchConfig:
+    return _mod(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    """Reduced config for CPU-executed smoke tests.
+
+    f32 activations: the CPU backend's dot thunks don't execute some
+    bf16xbf16->f32 shapes (MLA einsums); the full bf16 configs are only
+    lowered/compiled on this host, never executed.
+    """
+    import jax.numpy as jnp
+
+    return _mod(name).smoke_config().scaled(dtype=jnp.float32)
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get_config(n) for n in ALL_ARCHS}
+
+
+__all__ = [
+    "ALL_ARCHS",
+    "SHAPES",
+    "ShapeSpec",
+    "all_configs",
+    "cell_is_runnable",
+    "get_config",
+    "get_smoke_config",
+]

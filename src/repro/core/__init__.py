@@ -1,0 +1,69 @@
+"""Core library: the paper's SMR schemes and their JAX/TPU adaptation.
+
+``make_scheme(name, ...)`` is the registry the benchmarks and the serving
+runtime use to select a reclamation scheme (paper §5 scheme list).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from .atomics import (
+    INF_ERA,
+    INVPTR,
+    AtomicInt,
+    AtomicPair,
+    AtomicRef,
+    AtomicTriple,
+    PairPtrView,
+    PtrView,
+    TriplePtrView,
+)
+from .ebr import EBR
+from .hazard_eras import HazardEras
+from .hazard_pointers import HazardPointers
+from .ibr import IBR2GE
+from .leak import LeakMemory
+from .smr_base import POISON, Block, SMRScheme
+from .wfe import WFE
+
+SCHEMES = {
+    "WFE": WFE,
+    "HE": HazardEras,
+    "HP": HazardPointers,
+    "EBR": EBR,
+    "2GEIBR": IBR2GE,
+    "Leak": LeakMemory,
+}
+
+
+def make_scheme(name: str, max_threads: int, **kwargs: Any) -> SMRScheme:
+    try:
+        cls = SCHEMES[name]
+    except KeyError:
+        raise ValueError(f"unknown SMR scheme {name!r}; one of {sorted(SCHEMES)}")
+    return cls(max_threads, **kwargs)
+
+
+__all__ = [
+    "INF_ERA",
+    "INVPTR",
+    "POISON",
+    "AtomicInt",
+    "AtomicPair",
+    "AtomicRef",
+    "AtomicTriple",
+    "PtrView",
+    "PairPtrView",
+    "TriplePtrView",
+    "Block",
+    "SMRScheme",
+    "WFE",
+    "HazardEras",
+    "HazardPointers",
+    "EBR",
+    "IBR2GE",
+    "LeakMemory",
+    "SCHEMES",
+    "make_scheme",
+]

@@ -1,0 +1,235 @@
+"""Linearizable atomic primitives (shim layer).
+
+The paper assumes x86_64/AArch64 hardware atomics: single-word load/store,
+CAS, wide-CAS (WCAS, two adjacent words), and fetch-and-add (F&A).  CPython
+has no native atomics, so each cell below guards its word(s) with one lock:
+every operation is a single critical section and therefore a single
+linearization point.  This preserves the *semantics* (every interleaving the
+schemes can exhibit is exercised by the thread scheduler); the *progress*
+property (lock-freedom of the primitive itself) is emulated, which DESIGN.md
+§2.3 states explicitly.
+
+All higher layers (WFE, HE, HP, EBR, IBR and the data structures) use only
+this module for shared mutable state, so the algorithms above this line are
+port-faithful to the paper's pseudo-code.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Tuple
+
+__all__ = [
+    "INF_ERA",
+    "INVPTR",
+    "AtomicInt",
+    "AtomicRef",
+    "AtomicPair",
+    "AtomicTriple",
+    "PtrView",
+    "PairPtrView",
+]
+
+# The paper uses ∞ for "no reservation".  Eras are Python ints (unbounded),
+# so any finite era compares below INF_ERA.
+INF_ERA: int = (1 << 63) - 1
+
+
+class _InvPtr:
+    """Reserved pointer value that no data structure may ever store.
+
+    The paper reserves the maximal address (MAP_FAILED).  A unique sentinel
+    object plays that role here; ``is INVPTR`` is the identity test.
+    """
+
+    __slots__ = ()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return "<invptr>"
+
+
+INVPTR = _InvPtr()
+
+
+class AtomicInt:
+    """Single-word atomic integer: load/store/CAS/F&A."""
+
+    __slots__ = ("_v", "_lock")
+
+    def __init__(self, value: int = 0):
+        self._v = value
+        self._lock = threading.Lock()
+
+    def load(self) -> int:
+        with self._lock:
+            return self._v
+
+    def store(self, value: int) -> None:
+        with self._lock:
+            self._v = value
+
+    def cas(self, expected: int, new: int) -> bool:
+        with self._lock:
+            if self._v == expected:
+                self._v = new
+                return True
+            return False
+
+    def fa_add(self, delta: int = 1) -> int:
+        """Fetch-and-add; returns the *previous* value (x86 ``lock xadd``)."""
+        with self._lock:
+            old = self._v
+            self._v = old + delta
+            return old
+
+
+class AtomicRef:
+    """Single-word atomic reference."""
+
+    __slots__ = ("_v", "_lock")
+
+    def __init__(self, value: Any = None):
+        self._v = value
+        self._lock = threading.Lock()
+
+    def load(self) -> Any:
+        with self._lock:
+            return self._v
+
+    def store(self, value: Any) -> None:
+        with self._lock:
+            self._v = value
+
+    def cas(self, expected: Any, new: Any) -> bool:
+        with self._lock:
+            if self._v is expected:
+                self._v = new
+                return True
+            return False
+
+
+class AtomicPair:
+    """Two adjacent words updated together by WCAS (cmpxchg16b analogue).
+
+    Components are exposed as ``.A`` / ``.B`` in the paper; here a pair tuple
+    ``(a, b)``.  Single-word stores of one component (the paper's plain
+    ``reservations[tid][index].A = era`` stores) are provided as
+    ``store_a``/``store_b`` — on real hardware those are ordinary aligned
+    64-bit stores that do not touch the sibling word.
+    """
+
+    __slots__ = ("_a", "_b", "_lock")
+
+    def __init__(self, pair: Tuple[Any, Any]):
+        self._a, self._b = pair
+        self._lock = threading.Lock()
+
+    def load(self) -> Tuple[Any, Any]:
+        with self._lock:
+            return (self._a, self._b)
+
+    def load_a(self) -> Any:
+        with self._lock:
+            return self._a
+
+    def load_b(self) -> Any:
+        with self._lock:
+            return self._b
+
+    def store(self, pair: Tuple[Any, Any]) -> None:
+        with self._lock:
+            self._a, self._b = pair
+
+    def store_a(self, a: Any) -> None:
+        with self._lock:
+            self._a = a
+
+    def store_b(self, b: Any) -> None:
+        with self._lock:
+            self._b = b
+
+    def wcas(self, expected: Tuple[Any, Any], new: Tuple[Any, Any]) -> bool:
+        with self._lock:
+            if self._a == expected[0] and self._b == expected[1]:
+                self._a, self._b = new
+                return True
+            return False
+
+
+class AtomicTriple:
+    """Atomic cell holding a (ptr, flag, tag) triple.
+
+    Used by the Natarajan-Mittal BST, where flag/tag live in pointer low bits
+    on real hardware — one CAS updates the packed word.  Here the whole triple
+    is one atomic cell with a single linearization point, which is the same
+    abstraction.
+    """
+
+    __slots__ = ("_v", "_lock")
+
+    def __init__(self, value: Tuple[Any, bool, bool]):
+        self._v = value
+        self._lock = threading.Lock()
+
+    def load(self) -> Tuple[Any, bool, bool]:
+        with self._lock:
+            return self._v
+
+    def store(self, value: Tuple[Any, bool, bool]) -> None:
+        with self._lock:
+            self._v = value
+
+    def cas(self, expected: Tuple[Any, bool, bool], new: Tuple[Any, bool, bool]) -> bool:
+        with self._lock:
+            if (
+                self._v[0] is expected[0]
+                and self._v[1] == expected[1]
+                and self._v[2] == expected[2]
+            ):
+                self._v = new
+                return True
+            return False
+
+
+class PtrView:
+    """Uniform ``load() -> block`` view over an AtomicRef.
+
+    ``get_protected(ptr, ...)`` in the paper takes ``block**`` — a location it
+    re-reads in its validation loop.  Views adapt the differently shaped
+    atomic cells of each data structure to that contract.
+    """
+
+    __slots__ = ("_ref",)
+
+    def __init__(self, ref: AtomicRef):
+        self._ref = ref
+
+    def load(self) -> Any:
+        return self._ref.load()
+
+
+class PairPtrView:
+    """View of the pointer component of an (ptr, mark) AtomicPair."""
+
+    __slots__ = ("_pair",)
+
+    def __init__(self, pair: AtomicPair):
+        self._pair = pair
+
+    def load(self) -> Any:
+        return self._pair.load()[0]
+
+
+class TriplePtrView:
+    """View of the pointer component of an (ptr, flag, tag) AtomicTriple."""
+
+    __slots__ = ("_cell",)
+
+    def __init__(self, cell: AtomicTriple):
+        self._cell = cell
+
+    def load(self) -> Any:
+        return self._cell.load()[0]
+
+
+__all__.append("TriplePtrView")

@@ -1,0 +1,86 @@
+"""Distributed era clock for the multi-pod runtime (DESIGN.md §8).
+
+A single F&A word does not exist across pods.  Instead each pod advances a
+local monotone counter and the global era is the *maximum* over pods,
+merged by an all-reduce-max piggybacked on collectives a decode/train step
+already runs.
+
+Safety argument (HE/WFE invariant preserved): a reader's published
+reservation can only LAG the true global era — the interval check
+``alloc_era <= resv <= retire_era`` then errs toward keeping blocks alive:
+lag delays reclamation, never enables it.  Monotonicity of max-merge means
+eras never regress, so ``retire_era >= alloc_era`` stays true for every
+block.  Boundedness: each pod's increments are bounded by its own
+alloc/retire activity exactly as in the single-pod proof.
+
+``merged_era`` is the shard_map building block; ``DistributedEraClock`` is
+the host-side wrapper the pool uses (one instance per pod/process, the
+device mirror refreshed at step boundaries).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # jax >= 0.8
+    from jax import shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+__all__ = ["merged_era", "DistributedEraClock"]
+
+
+def merged_era(local_era: jax.Array, axis_name: str) -> jax.Array:
+    """all-reduce-max merge of per-pod era counters (inside shard_map)."""
+    return jax.lax.pmax(local_era, axis_name)
+
+
+class DistributedEraClock:
+    """Per-pod era clock with periodic max-merge.
+
+    The local component is the ordinary WFE F&A counter; ``merge`` folds in
+    the freshest remote maximum (obtained from the piggybacked collective)
+    and returns the merged value.  ``advance_to`` is monotone by
+    construction.
+    """
+
+    def __init__(self, smr) -> None:
+        self.smr = smr  # the pod-local WFE instance (owns global_era)
+
+    @property
+    def local(self) -> int:
+        return self.smr.global_era.load()
+
+    def merge(self, remote_max: int) -> int:
+        """Fold a remote era maximum into the local clock (monotone join).
+
+        Uses CAS so concurrent local F&A increments are never lost; bounded
+        retries (the clock only moves forward, so a failed CAS means
+        someone else already advanced past ``remote_max``).
+        """
+        while True:
+            cur = self.smr.global_era.load()
+            if remote_max <= cur:
+                return cur
+            if self.smr.global_era.cas(cur, remote_max):
+                return remote_max
+
+    def device_merge(self, mesh, axis: str = "pod") -> int:
+        """Run the actual collective on ``mesh`` and merge the result.
+
+        In production this rides on an existing step collective; here it is
+        a standalone shard_map (the dry-run lowers it on the 2x16x16 mesh).
+        """
+        from jax.sharding import PartitionSpec as P
+
+        n = mesh.shape[axis]
+        local = jnp.full((n,), self.local, jnp.int32)
+
+        def f(x):
+            return merged_era(x[0], axis)[None]
+
+        merged = shard_map(f, mesh=mesh, in_specs=P(axis),
+                           out_specs=P(axis))(local)
+        return self.merge(int(np.max(np.asarray(merged))))

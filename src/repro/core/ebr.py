@@ -1,0 +1,84 @@
+"""Epoch-Based Reclamation (EBR) — Fraser 2004 / RCU lineage.
+
+Three-epoch scheme: a thread announces the global epoch on ``start_op`` and
+goes quiescent on ``end_op``.  A retired block is freed once every active
+thread has announced an epoch strictly newer than the block's retire epoch
+(two grace periods).  Fast, but **blocking**: one stalled reader pins every
+retired block forever — the unbounded-memory behaviour the paper's §5
+experiments expose and that ``benchmarks/unreclaimed.py`` reproduces.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional, Type
+
+from .atomics import INF_ERA, AtomicInt
+from .smr_base import Block, SMRScheme
+
+__all__ = ["EBR"]
+
+_QUIESCENT = INF_ERA
+
+
+class EBR(SMRScheme):
+    name = "EBR"
+    wait_free = False
+    bounded_memory = False  # a stalled thread blocks reclamation
+
+    def __init__(self, max_threads: int, epoch_freq: int = 32, cleanup_freq: int = 32):
+        super().__init__(max_threads)
+        self.epoch_freq = max(1, epoch_freq)
+        self.cleanup_freq = max(1, cleanup_freq)
+        self.global_epoch = AtomicInt(1)
+        self.announce: List[AtomicInt] = [
+            AtomicInt(_QUIESCENT) for _ in range(max_threads)
+        ]
+        self.alloc_counter = [0] * max_threads
+        self.retire_counter = [0] * max_threads
+
+    def start_op(self, tid: int) -> None:
+        self.announce[tid].store(self.global_epoch.load())
+
+    def end_op(self, tid: int) -> None:
+        self.announce[tid].store(_QUIESCENT)
+
+    def alloc_block(self, cls: Type[Block], tid: int, *args: Any, **kwargs: Any) -> Block:
+        if self.alloc_counter[tid] % self.epoch_freq == 0:
+            self.global_epoch.fa_add(1)
+        self.alloc_counter[tid] += 1
+        blk = cls(*args, **kwargs)
+        self.alloc_count[tid] += 1
+        return blk
+
+    def get_protected(self, ptr: Any, index: int, tid: int, parent: Optional[Block] = None) -> Any:
+        return ptr.load()  # the epoch bracket is the protection
+
+    def retire(self, blk: Block, tid: int) -> None:
+        blk.retire_era = self.global_epoch.load()
+        self.retire_lists[tid].append(blk)
+        self.retire_count[tid] += 1
+        if self.retire_counter[tid] % self.cleanup_freq == 0:
+            self.cleanup(tid)
+        self.retire_counter[tid] += 1
+
+    def cleanup(self, tid: int) -> None:
+        min_active = self.global_epoch.load()
+        for i in range(self.max_threads):
+            e = self.announce[i].load()
+            if e != _QUIESCENT and e < min_active:
+                min_active = e
+        remaining: List[Block] = []
+        for blk in self.retire_lists[tid]:
+            # Freed only after two grace periods beyond the retire epoch.
+            if blk.retire_era + 2 <= min_active:
+                self.free(blk, tid)
+            else:
+                remaining.append(blk)
+        self.retire_lists[tid][:] = remaining
+
+    def clear(self, tid: int) -> None:
+        pass  # protection is the epoch bracket, not per-pointer state
+
+    def flush(self, tid: int) -> None:
+        self.global_epoch.fa_add(1)
+        self.cleanup(tid)

@@ -1,0 +1,141 @@
+"""Common API for safe-memory-reclamation (SMR) schemes.
+
+The API follows the paper (§2.3): ``alloc_block`` / ``get_protected`` /
+``retire`` / ``clear``, plus ``start_op``/``end_op`` so epoch-style schemes
+(EBR, IBR) can bracket operations — for HP/HE/WFE ``end_op`` simply calls
+``clear``.  Thread identity is an explicit ``tid`` (the paper's pseudo-code
+does the same); threads obtain a tid from ``register_thread()``.
+
+Every reclaimable object derives from :class:`Block` — the paper's
+``block header`` embedded in each node.  ``free()`` poisons the block so that
+use-after-free becomes loudly visible in tests instead of silently reading
+stale data.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, List, Optional, Type
+
+from .atomics import INF_ERA
+
+__all__ = ["Block", "SMRScheme", "POISON"]
+
+
+class _Poison:
+    __slots__ = ()
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return "<poison>"
+
+
+POISON = _Poison()
+
+
+class Block:
+    """Reclamation header every managed node embeds (paper Fig. 2).
+
+    ``alloc_era``/``retire_era`` bound the block's lifetime interval.
+    ``freed`` flags reclaimed blocks; schemes poison payload slots on free so
+    that unsafe reclamation manifests as an explicit error.
+    """
+
+    __slots__ = ("alloc_era", "retire_era", "birth_epoch", "freed")
+
+    def __init__(self) -> None:
+        self.alloc_era = 0
+        self.retire_era = INF_ERA
+        self.birth_epoch = 0  # used by IBR
+        self.freed = False
+
+    def _poison_payload(self) -> None:
+        """Overwrite payload slots with POISON.  Subclasses extend."""
+
+
+class SMRScheme:
+    """Base class; concrete schemes implement the protected-access protocol."""
+
+    #: human-readable scheme id used by benchmarks
+    name: str = "base"
+    #: True if every SMR operation is wait-free bounded
+    wait_free: bool = False
+    #: True if retired-but-unreclaimed memory is bounded even with stalled threads
+    bounded_memory: bool = False
+
+    def __init__(self, max_threads: int):
+        self.max_threads = max_threads
+        self._tid_lock = threading.Lock()
+        self._next_tid = 0
+        # single-writer-per-index stats (no locking needed)
+        self.alloc_count: List[int] = [0] * max_threads
+        self.free_count: List[int] = [0] * max_threads
+        self.retire_count: List[int] = [0] * max_threads
+        self.retire_lists: List[List[Block]] = [[] for _ in range(max_threads)]
+
+    # -- thread management -------------------------------------------------
+    def register_thread(self) -> int:
+        with self._tid_lock:
+            tid = self._next_tid
+            self._next_tid += 1
+        if tid >= self.max_threads:
+            raise RuntimeError(
+                f"{self.name}: more than max_threads={self.max_threads} threads"
+            )
+        return tid
+
+    # -- core API (paper §2.3) ----------------------------------------------
+    def alloc_block(self, cls: Type[Block], tid: int, *args: Any, **kwargs: Any) -> Block:
+        raise NotImplementedError
+
+    def get_protected(self, ptr: Any, index: int, tid: int, parent: Optional[Block] = None) -> Any:
+        """Safely dereference ``ptr`` (an object with ``load() -> Block``).
+
+        ``index`` names the reservation slot; ``parent`` is the block that
+        physically contains the pointer (WFE uses it on the slow path; other
+        schemes ignore it).
+        """
+        raise NotImplementedError
+
+    def retire(self, blk: Block, tid: int) -> None:
+        raise NotImplementedError
+
+    def clear(self, tid: int) -> None:
+        raise NotImplementedError
+
+    def start_op(self, tid: int) -> None:
+        """Bracket the start of a data-structure operation (EBR/IBR)."""
+
+    def transfer(self, src: int, dst: int, tid: int) -> None:
+        """Copy the reservation in slot ``src`` to slot ``dst``.
+
+        Safe protection hand-off: while the source slot still holds the
+        reservation, duplicating a published pointer (HP) or era (HE/WFE)
+        keeps the protected block covered continuously.  Epoch schemes
+        protect by bracket, so this is a no-op for them.
+        """
+
+    def end_op(self, tid: int) -> None:
+        self.clear(tid)
+
+    # -- reclamation --------------------------------------------------------
+    def free(self, blk: Block, tid: int) -> None:
+        assert not blk.freed, "double free"
+        blk.freed = True
+        blk._poison_payload()
+        self.free_count[tid] += 1
+
+    def flush(self, tid: int) -> None:
+        """Best-effort cleanup of this thread's retire list (benchmark drain)."""
+
+    # -- metrics -------------------------------------------------------------
+    def unreclaimed(self) -> int:
+        """Retired-but-not-freed blocks across all threads (sampled racily)."""
+        return sum(len(lst) for lst in self.retire_lists)
+
+    def stats(self) -> dict:
+        return {
+            "allocs": sum(self.alloc_count),
+            "frees": sum(self.free_count),
+            "retires": sum(self.retire_count),
+            "unreclaimed": self.unreclaimed(),
+        }

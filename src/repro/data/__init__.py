@@ -1,0 +1,5 @@
+"""Data pipeline: synthetic tokenized stream with era-reclaimed prefetch."""
+
+from .pipeline import SyntheticLMData, PrefetchingLoader
+
+__all__ = ["SyntheticLMData", "PrefetchingLoader"]

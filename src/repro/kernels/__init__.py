@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+* ``era_scan`` — WFE cleanup() interval scan (paper Fig. 4 / Theorem 4)
+* ``paged_attention`` — decode attention through era-reclaimed block tables
+
+Each kernel ships with a pure-jnp oracle in ``ref.py``; ``ops.py`` is the
+public jit'd entry point with a kernel/reference selector.
+"""
+
+from .ops import can_delete_blocks, paged_decode_attention
+
+__all__ = ["can_delete_blocks", "paged_decode_attention"]

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: WFE cleanup() interval scan (paper Fig. 4, Theorem 4).
+
+The reclamation hot path is R retired blocks × (T threads × H reservations)
+interval-overlap tests.  At serving scale (tens of thousands of 16-token KV
+blocks retiring per scheduling tick) this is a dense, memory-bound,
+embarrassingly-parallel compare-reduce: ideal VPU work.
+
+TPU mapping
+-----------
+* retired-block era vectors are tiled into VMEM in (BLOCK_R, 1) column tiles
+  over a 1-D grid;
+* the reservation matrix is small (T·H ≤ a few thousand words) and is
+  broadcast to every grid step as a single (1, TH) VMEM-resident block
+  (index_map pins it to (0, 0));
+* per tile: (BLOCK_R, TH) broadcast compare + any-reduce — a pure VPU
+  elementwise/reduction pattern, no MXU;
+* eras are int32 on-device (the host-side clock is monotonically advanced;
+  a 31-bit horizon outlasts any realistic serving epoch between restarts).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF_ERA32 = jnp.iinfo(jnp.int32).max
+BLOCK_R = 256  # retired blocks per grid step (8×128-aligned Rb×TH tiles)
+
+
+def _era_scan_kernel(alloc_ref, retire_ref, res_ref, out_ref):
+    a = alloc_ref[:, 0]  # (Rb,)
+    r = retire_ref[:, 0]
+    res = res_ref[0, :]  # (TH,)
+    valid = res != INF_ERA32
+    conflict = ((a[:, None] <= res[None, :])
+                & (res[None, :] <= r[:, None])
+                & valid[None, :])
+    out_ref[:, 0] = (~jnp.any(conflict, axis=1)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def era_scan(alloc_eras: jax.Array, retire_eras: jax.Array,
+             reservations: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """(R,) int32, (R,) int32, (T, H) int32 -> (R,) bool deletable mask."""
+    r = alloc_eras.shape[0]
+    th = reservations.size
+    # pad R to a BLOCK_R multiple, TH to a 128-lane multiple
+    rp = max(BLOCK_R, -(-r // BLOCK_R) * BLOCK_R)
+    thp = max(128, -(-th // 128) * 128)
+    a = jnp.full((rp, 1), 0, jnp.int32).at[:r, 0].set(alloc_eras)
+    # padded rows: [1, 0] is an empty interval -> never conflicts
+    t = jnp.full((rp, 1), -1, jnp.int32).at[:r, 0].set(retire_eras)
+    res = jnp.full((1, thp), INF_ERA32, jnp.int32)
+    res = res.at[0, :th].set(reservations.reshape(-1))
+
+    grid = (rp // BLOCK_R,)
+    out = pl.pallas_call(
+        _era_scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, thp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, 1), jnp.int32),
+        interpret=interpret,
+    )(a, t, res)
+    return out[:r, 0].astype(bool)

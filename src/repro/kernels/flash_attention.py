@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: causal flash attention (forward), GQA-aware.
+
+Why this kernel exists (EXPERIMENTS.md §Perf iteration 5): the pure-jnp
+chunked reference (models/attention.flash_attention) materializes every
+(cq × ck) score chunk and (m, l, acc) update in HBM — the dry-run profile
+charges ~8 TiB/step of attention-chunk traffic on deepseek train_4k.  On
+TPU these intermediates belong in VMEM: this kernel carries the online-
+softmax state in VMEM scratch across the (sequential) kv-chunk grid dim,
+so HBM traffic drops to Q + K + V + O (the roofline floor).
+
+Mapping:
+* grid = (B·KH, nq, nk) — nk innermost/sequential, carrying scratch;
+* q block (1, cq, G·D), kv blocks (1, ck, D) per kv-head; causal masking by
+  absolute positions with an early-exit ``pl.when`` on fully-masked chunks
+  (the 2x masked-half waste of the jnp reference disappears: skipped chunks
+  issue no MXU work);
+* block shapes are (128-multiple × head_dim) aligned for the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  cq: int, ck: int, g: int, d: int, causal: bool):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+    qi = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[:] = jnp.full_like(m_s, NEG_INF)
+        l_s[:] = jnp.zeros_like(l_s)
+        acc_s[:] = jnp.zeros_like(acc_s)
+
+    q_start = qi * cq
+    k_start = j * ck
+    # skip chunks entirely above the diagonal (causal)
+    run = (not causal) or (k_start <= q_start + cq - 1)
+
+    @pl.when(run)
+    def _compute():
+        # q block is (cq, G·D); rows position-major, groups minor -> (cq·G, D)
+        q = q_ref[0].reshape(cq * g, d).astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)  # (ck, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (1.0 / math.sqrt(d))  # (cq*G, ck)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (cq * g, ck), 0) // g
+            kpos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (cq * g, ck), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_s[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[:, :1] = l_s[:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_s[:] = acc_s[:] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[:, :1] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o = acc_s[:] / jnp.maximum(l_s[:, :1], 1e-30)  # (cq·G, D)
+        o_ref[0] = o.reshape(cq, g * d).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "cq", "ck",
+                                              "interpret"))
+def flash_attention_tpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, cq: int = 256, ck: int = 256,
+                        interpret: bool = True) -> jax.Array:
+    """q (B, T, H, D); k/v (B, T, KH, D) -> (B, T, H, D).
+
+    GQA: queries are grouped per kv head; G = H // KH query heads share one
+    K/V stream.  T must be divisible by the chunk sizes (pad upstream).
+    """
+    b, t, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    cq = min(cq, t)
+    ck = min(ck, t)
+    assert t % cq == 0 and t % ck == 0, (t, cq, ck)
+    nq, nk = t // cq, t // ck
+
+    # (B·KH, T, G·D) query layout: one grid row per (batch, kv head)
+    qr = q.reshape(b, t, kh, g, d).transpose(0, 2, 1, 3, 4).reshape(
+        b * kh, t, g * d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kh, t, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kh, t, d)
+
+    kernel = functools.partial(_flash_kernel, cq=cq, ck=ck, g=g, d=d,
+                               causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, cq, g * d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, ck, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, ck, d), lambda bh, i, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cq, g * d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kh, t, g * d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((cq * g, 128), jnp.float32),  # m (col 0)
+            pltpu.VMEM((cq * g, 128), jnp.float32),  # l
+            pltpu.VMEM((cq * g, d), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    # NOTE on the kernel body layout: q rows are (position-major, group-
+    # minor) so scores/mask index positions via row // g.
+    return out.reshape(b, kh, t, g, d).transpose(0, 2, 1, 3, 4).reshape(
+        b, t, h, d)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """jnp oracle (thin wrapper over the model's chunked reference)."""
+    from repro.models.attention import flash_attention
+
+    b, t = q.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    return flash_attention(q, k, v, pos, pos, causal=causal)

@@ -1,0 +1,45 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``use_kernel`` selects the Pallas path (TPU; validated on CPU via
+interpret=True) vs the pure-jnp reference (the CPU dry-run default).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .era_scan import era_scan
+from .paged_attention import paged_attention
+
+__all__ = ["can_delete_blocks", "paged_decode_attention"]
+
+
+def can_delete_blocks(alloc_eras, retire_eras, reservations, *,
+                      use_kernel: bool = False,
+                      interpret: bool = True) -> jax.Array:
+    """Vectorized WFE can_delete over R retired blocks.  Returns (R,) bool."""
+    alloc_eras = jnp.asarray(alloc_eras, jnp.int32)
+    retire_eras = jnp.asarray(retire_eras, jnp.int32)
+    reservations = jnp.asarray(reservations, jnp.int32)
+    if use_kernel:
+        return era_scan(alloc_eras, retire_eras, reservations,
+                        interpret=interpret)
+    return ref.era_scan_ref(alloc_eras, retire_eras, reservations)
+
+
+def paged_decode_attention(q, k_pool, v_pool, tables, lengths, *,
+                           scale: Optional[float] = None,
+                           use_kernel: bool = False,
+                           interpret: bool = True) -> jax.Array:
+    """Decode attention over the paged pool.  q (B,KH,G,D) -> (B,KH,G,D)."""
+    tables = jnp.asarray(tables, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if use_kernel:
+        return paged_attention(q, k_pool, v_pool, tables, lengths,
+                               scale=scale, interpret=interpret)
+    return ref.paged_attention_ref(q, k_pool, v_pool, tables, lengths,
+                                   scale=scale)

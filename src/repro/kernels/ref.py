@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: kernel tests sweep shapes/dtypes and
+assert_allclose against these functions, and the CPU dry-run path uses them
+directly (Pallas kernels lower for TPU only; a config flag selects the
+kernel path on TPU).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+INF_ERA32 = jnp.iinfo(jnp.int32).max
+
+
+# ----------------------------------------------------------------- era_scan
+def era_scan_ref(alloc_eras: jax.Array, retire_eras: jax.Array,
+                 reservations: jax.Array) -> jax.Array:
+    """WFE cleanup() interval scan — the reclamation hot path (paper Fig. 4).
+
+    alloc_eras, retire_eras: (R,) int32 — lifetimes of retired blocks.
+    reservations: (T, H) int32 era components (INF_ERA32 = empty slot).
+    Returns (R,) bool: True iff no reservation overlaps the block's lifetime,
+    i.e. the paper's ``can_delete(blk, 0, H)`` vectorized over blocks.
+    """
+    res = reservations.reshape(-1)  # (T*H,)
+    valid = res != INF_ERA32
+    conflict = ((alloc_eras[:, None] <= res[None, :])
+                & (res[None, :] <= retire_eras[:, None])
+                & valid[None, :])
+    return ~jnp.any(conflict, axis=1)
+
+
+# ----------------------------------------------------- paged decode attention
+def paged_attention_ref(
+    q: jax.Array,          # (B, KH, G, D)  one query token per request
+    k_pool: jax.Array,     # (N, bs, KH, D) paged key pool
+    v_pool: jax.Array,     # (N, bs, KH, D) paged value pool
+    tables: jax.Array,     # (B, nblk) int32 block ids (padding: any valid id)
+    lengths: jax.Array,    # (B,) int32 tokens in cache (context length)
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Decode attention through block tables.  Returns (B, KH, G, D)."""
+    b, kh, g, d = q.shape
+    n, bs, _, _ = k_pool.shape
+    nblk = tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    k = k_pool[tables]  # (B, nblk, bs, KH, D)
+    v = v_pool[tables]
+    k = k.reshape(b, nblk * bs, kh, d)
+    v = v.reshape(b, nblk * bs, kh, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(nblk * bs)[None, :]  # logical positions
+    s = jnp.where((pos < lengths[:, None])[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax ---------------------------------------
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell: ``jax.jit(step, in_shardings=...).lower(*abstract_args)``
+then ``.compile()`` on the production meshes (16×16 single-pod and 2×16×16
+multi-pod).  Success proves the distribution config is coherent: shardings
+propagate, collectives partition, and ``memory_analysis()`` shows the
+per-device footprint.  ``cost_analysis()`` + the HLO collective parse feed
+EXPERIMENTS.md §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --cells all --mesh both \
+      --out results/dryrun.jsonl          # resumable: done cells are skipped
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs import ALL_ARCHS, SHAPES, cell_is_runnable, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (dominant_term, mfu_fraction, model_flops,
+                                   parse_collectives, roofline_terms)
+from repro.launch.specs import build_cell
+from repro.sharding.axes import axis_rules
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, keep_hlo: bool = False, verbose: bool = True,
+             flags: Optional[dict] = None) -> dict:
+    from repro.models import perf_flags
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "status": "skipped",
+        "flags": {k: v for k, v in (flags or {}).items() if v},
+    }
+    prev_flags = perf_flags.set_flags(**(flags or {}))
+    try:
+        return _run_cell_inner(cfg, shape, multi_pod, rec, keep_hlo, verbose)
+    finally:
+        perf_flags.set_flags(**prev_flags)
+
+
+def _run_cell_inner(cfg, shape, multi_pod, rec, keep_hlo, verbose) -> dict:
+    arch, shape_name = rec["arch"], rec["shape"]
+    if not cell_is_runnable(cfg, shape):
+        rec["reason"] = ("long_500k needs sub-quadratic attention; "
+                         f"{arch} is full-attention (DESIGN.md §4)")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+    try:
+        with mesh, axis_rules(mesh):
+            cell = build_cell(cfg, shape, mesh)
+            jitted = jax.jit(cell.step, in_shardings=cell.in_shardings,
+                             donate_argnums=cell.donate_argnums)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec.update(status="FAILED", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc(limit=8))
+        return rec
+
+    rec.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1), n_devices=n_dev)
+
+    # ---------------- memory ----------------
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+            "code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+        live = (rec["memory"]["argument_bytes"]
+                + rec["memory"]["output_bytes"]
+                + rec["memory"]["temp_bytes"]
+                - rec["memory"]["alias_bytes"])
+        rec["memory"]["live_bytes_per_device"] = int(live)
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    # ---------------- cost (XLA's own numbers, loop-UNAWARE on CPU) ------
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["xla_cost"] = {"flops": float(ca.get("flops", 0.0)),
+                           "bytes_accessed": float(ca.get("bytes accessed",
+                                                          0.0))}
+    except Exception as e:  # pragma: no cover
+        rec["xla_cost"] = {"error": str(e)}
+
+    # ---------------- loop-aware HLO analysis + roofline ----------------
+    # XLA:CPU cost_analysis counts while bodies once (verified 10x low on a
+    # 10-trip scan), so the roofline uses hlo_analysis.analyze instead.
+    try:
+        from repro.launch.hlo_analysis import analyze
+
+        hlo = compiled.as_text()
+        prof = analyze(hlo, n_dev)
+        flops = prof["flops_per_device"]
+        bytes_acc = prof["bytes_per_device"]
+        coll = prof["collectives"]
+        rec["cost"] = {"flops_per_device": flops,
+                       "bytes_per_device": bytes_acc,
+                       "missing_trip_counts": prof["missing_trip_counts"]}
+        rec["collectives"] = coll
+        terms = roofline_terms(flops, bytes_acc, coll)
+        rec["roofline"] = terms
+        rec["roofline"]["dominant"] = dominant_term(terms)
+        n_active = (cfg.active_param_count() if cfg.is_moe else None)
+        mfl = model_flops(cfg, shape, n_active)
+        rec["roofline"].update(model_flops=mfl,
+                               **mfu_fraction(mfl, flops, n_dev, terms))
+        if keep_hlo:
+            rec["hlo_chars"] = len(hlo)
+    except Exception as e:  # pragma: no cover
+        rec["collectives"] = {"error": str(e)}
+
+    if verbose:
+        _print_cell(rec)
+    return rec
+
+
+def _print_cell(rec: dict) -> None:
+    print(f"== {rec['arch']} × {rec['shape']} on {rec['mesh']} "
+          f"[{rec['status']}] ==")
+    if rec["status"] != "ok":
+        print("   ", rec.get("reason") or rec.get("error"))
+        return
+    mem = rec.get("memory", {})
+    if "live_bytes_per_device" in mem:
+        print(f"   per-device: args {mem['argument_bytes']/2**30:.2f} GiB, "
+              f"temp {mem['temp_bytes']/2**30:.2f} GiB, "
+              f"live {mem['live_bytes_per_device']/2**30:.2f} GiB")
+    ro = rec.get("roofline", {})
+    if "compute_s" in ro:
+        print(f"   roofline: compute {ro['compute_s']*1e3:.2f} ms | "
+              f"memory {ro['memory_s']*1e3:.2f} ms | "
+              f"collective {ro['collective_s']*1e3:.2f} ms "
+              f"-> {ro['dominant']}  "
+              f"(roofline fraction {ro.get('roofline_fraction', 0):.3f})")
+    print(f"   lower {rec['lower_s']}s, compile {rec['compile_s']}s")
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--cells", default=None,
+                    help="'all' or comma list arch:shape")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--out", default=None, help="JSONL output (resumable)")
+    ap.add_argument("--opt", default=None,
+                    help="comma list of perf flags to enable, or 'all'")
+    args = ap.parse_args(argv)
+
+    from repro.models.perf_flags import FLAGS as _ALL_FLAGS
+    flags = {}
+    if args.opt == "all":
+        flags = {k: True for k in _ALL_FLAGS}
+    elif args.opt:
+        flags = {k: True for k in args.opt.split(",")}
+
+    cells = []
+    if args.cells == "all":
+        for a in ALL_ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    elif args.cells:
+        for item in args.cells.split(","):
+            a, s = item.split(":")
+            cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --cells required"
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    done = set()
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                for line in f:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+
+    failures = 0
+    for a, s in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            if (a, s, mesh_name) in done:
+                continue
+            rec = run_cell(a, s, mp, flags=flags)
+            failures += rec["status"] == "FAILED"
+            if rec["status"] == "FAILED":
+                print(f"FAILED {a} × {s} on {mesh_name}: {rec['error']}")
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,41 @@
+"""Production mesh definition (a FUNCTION — importing this module never
+touches jax device state).
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod: (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis composes with "data" for DP (the batch logical axis maps to
+("pod", "data")), so gradients all-reduce hierarchically: reduce-scatter
+within a pod over ICI, then the small cross-pod component over DCI.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices for mesh {shape}; have {len(devices)}. "
+            "The dry-run entry point sets "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import.")
+    if len(devices) == need:
+        return jax.make_mesh(shape, axes)
+    # 512 placeholder devices serve both meshes: the single-pod mesh takes
+    # the first 256
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(devices[:need]).reshape(shape), axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))

@@ -1,0 +1,66 @@
+"""Serving driver: run the continuous-batching engine on a reduced config
+(CPU-executable) or lower the full-config serve step for the production
+mesh (see launch/dryrun.py for the sweep).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
+      --requests 16 --new-tokens 12 --scheme WFE
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS, default="stablelm-3b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--scheme", default="WFE",
+                    choices=("WFE", "HE", "HP", "EBR", "2GEIBR"))
+    ap.add_argument("--n-blocks", type=int, default=64)
+    ap.add_argument("--block-size", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--force-slow-path", action="store_true",
+                    help="WFE max_attempts=1 (paper §5 stress)")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch)
+    if cfg.use_mla or cfg.is_encoder_decoder or any(
+            k != "attn" for k in cfg.block_pattern):
+        raise SystemExit(f"{args.arch}: the paged engine serves dense "
+                         "full-attention GQA archs (see DESIGN.md §2.1)")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    smr_kwargs = {"era_freq": 4, "cleanup_freq": 4}
+    if args.force_slow_path and args.scheme == "WFE":
+        smr_kwargs["max_attempts"] = 1
+    engine = ServeEngine(cfg, params, n_blocks=args.n_blocks,
+                         block_size=args.block_size,
+                         max_batch=args.max_batch, scheme=args.scheme,
+                         **smr_kwargs)
+    tid = engine.pool.register_thread()
+    for i in range(args.requests):
+        prompt = [(3 * i + j) % cfg.vocab_size for j in range(1 + i % 6)]
+        engine.submit(prompt, args.new_tokens)
+    t0 = time.time()
+    stats = engine.run(tid)
+    dt = time.time() - t0
+    toks = stats["completed"] * args.new_tokens
+    print(f"scheme={args.scheme} completed={stats['completed']} "
+          f"tokens={toks} ({toks/dt:.1f} tok/s)")
+    print("scheduler:", stats)
+    print("pool:", engine.pool.stats())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,163 @@
+"""Abstract input/parameter specs + shardings for the dry-run.
+
+Everything here is ``jax.ShapeDtypeStruct`` — weak-type-correct, shardable,
+never allocated.  ``build_cell`` returns the step callable, abstract args
+and in_shardings for one (arch × shape) cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import build_model
+from repro.models.common import ArchConfig
+from repro.sharding.axes import (logical_to_spec, spec_tree_for_params,
+                                 zero_shard_spec)
+from repro.train.optim import AdamWConfig, adamw_init
+from repro.train.trainer import make_train_step
+
+FSDP_THRESHOLD = 1 << 24  # leaves above 16M elements also shard over DP
+
+
+def _sds(tree: Any) -> Any:
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def param_specs(model, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """Logical specs + FSDP transform for big leaves (DESIGN.md §5)."""
+    abs_params = model.abstract_params()
+    specs = spec_tree_for_params(abs_params, model.params_axes(), mesh)
+
+    def fsdp_one(spec, leaf):
+        if not fsdp or leaf.size < FSDP_THRESHOLD:
+            return spec
+        # stacked-group leaves (ndim>=3 with the layers dim first) keep dim0
+        # whole so the scan slices stay local
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        start = 1 if leaf.ndim >= 3 else 0
+        sub = P(*entries[start:])
+        sub = zero_shard_spec(sub, leaf.shape[start:], mesh, axis="data")
+        out = entries[:start] + list(sub)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    return jax.tree.map(fsdp_one, specs, abs_params,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def state_specs(model, mesh: Mesh) -> Tuple[Any, Any]:
+    """(abstract train state, spec tree) for train_step lowering."""
+    abs_params = model.abstract_params()
+    p_specs = param_specs(model, mesh)
+    abs_opt = jax.eval_shape(adamw_init, abs_params)
+    # m/v inherit the (FSDP) param spec -> ZeRO sharding for free
+    opt_specs = {"m": p_specs, "v": p_specs, "step": P()}
+    state = {"params": abs_params, "opt": abs_opt}
+    specs = {"params": p_specs, "opt": opt_specs}
+    return _sds(state), specs
+
+
+def _extras_shapes(cfg: ArchConfig, batch: int) -> Dict[str, Any]:
+    out = {}
+    if cfg.frontend == "patches":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frontend_tokens, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "frames":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_ctx, cfg.d_model), cfg.dtype)
+    return out
+
+
+def _extras_specs(cfg: ArchConfig, extras: Dict[str, Any], mesh: Mesh):
+    return {k: logical_to_spec(("batch", None, None), v.shape, mesh)
+            for k, v in extras.items()}
+
+
+def _serving_params(model) -> Any:
+    """Serving checkpoints store activations-dtype (bf16) weights."""
+    dt = model.cfg.dtype
+
+    def one(l):
+        kind = jnp.issubdtype(l.dtype, jnp.floating)
+        return jax.ShapeDtypeStruct(l.shape, dt if kind else l.dtype)
+
+    return jax.tree.map(one, model.abstract_params())
+
+
+@dataclasses.dataclass
+class Cell:
+    """One lowered (arch × shape) dry-run cell."""
+
+    step: Callable
+    args: Tuple
+    in_shardings: Tuple
+    donate_argnums: Tuple[int, ...]
+    description: str
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    model = build_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+
+    def shard(tree):
+        return jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp), tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        state, specs = state_specs(model, mesh)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            **_extras_shapes(cfg, b),
+        }
+        bspec = {
+            "tokens": logical_to_spec(("batch", None), (b, s), mesh),
+            "labels": logical_to_spec(("batch", None), (b, s), mesh),
+            **_extras_specs(cfg, _extras_shapes(cfg, b), mesh),
+        }
+        opt_cfg = AdamWConfig()
+        step = make_train_step(model, opt_cfg,
+                               grad_shardings=shard(specs["params"]))
+        return Cell(step, (state, batch),
+                    (shard(specs), shard(bspec)), (0,),
+                    f"train_step[{cfg.name}|{shape.name}]")
+
+    if shape.kind == "prefill":
+        abs_params = _serving_params(model)
+        p_specs = param_specs(model, mesh)
+        tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        extras = _extras_shapes(cfg, b)
+        tspec = logical_to_spec(("batch", None), (b, s), mesh)
+
+        def step(params, tokens, extra):
+            return model.prefill(params, tokens, max_len=s, extra=extra)
+
+        return Cell(step, (abs_params, tokens, extras),
+                    (shard(p_specs), shard(tspec),
+                     shard(_extras_specs(cfg, extras, mesh))), (),
+                    f"prefill_step[{cfg.name}|{shape.name}]")
+
+    # decode: one new token against a cache of seq_len
+    abs_params = _serving_params(model)
+    p_specs = param_specs(model, mesh)
+    cache = _sds(jax.eval_shape(lambda: model.init_cache(b, s)))
+    c_specs = spec_tree_for_params(cache, model.cache_axes(), mesh)
+    tokens = jax.ShapeDtypeStruct((b,), jnp.int32)
+    positions = jax.ShapeDtypeStruct((b,), jnp.int32)
+    vspec = logical_to_spec(("batch",), (b,), mesh)
+
+    def step(params, cache, tokens, positions):
+        return model.decode_step(params, cache, tokens, positions)
+
+    return Cell(step, (abs_params, cache, tokens, positions),
+                (shard(p_specs), shard(c_specs), shard(vspec), shard(vspec)),
+                (1,), f"serve_step[{cfg.name}|{shape.name}]")

@@ -1,0 +1,6 @@
+"""Model zoo substrate: pure-JAX composable LM/VLM/audio/SSM architectures."""
+
+from .common import ArchConfig
+from .model_zoo import build_model, Model
+
+__all__ = ["ArchConfig", "build_model", "Model"]

@@ -1,0 +1,423 @@
+"""Attention: GQA (full / sliding-window / local) + MLA, train & decode paths.
+
+Design notes
+------------
+* Training/prefill attention is a *chunked online-softmax* ("flash") pure-JAX
+  implementation: an outer ``lax.scan`` over query chunks and an inner scan
+  over key chunks with running (max, sum, acc) — memory is O(chunk²) instead
+  of O(S²), which is what makes prefill_32k lowerable.  This is also the
+  jnp oracle for the Pallas flash kernel (kernels/flash_attention.py).
+* Sliding-window/local attention slices a static-width KV *band* per query
+  chunk (``window + chunk`` tokens) so compute is O(S·w), enabling
+  long_500k for recurrentgemma/mixtral.
+* Decode is a single-token dot against the cache; MLA decode uses the
+  *absorbed* form (q multiplied into W_uk so attention runs in the 512-d
+  latent space) — the paged cache then stores latents, not K/V.
+* GQA grouping is done by reshaping q to (B, T, KV, G, D); KV heads are never
+  materialized per-query-head.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.axes import logical_constraint
+
+from .layers import apply_rope, dense_init, matmul
+
+NEG_INF = -1e30
+
+
+# ===================================================================== GQA
+def init_gqa(cfg, key):
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d, h * hd), dtype=cfg.param_dtype),
+        "wk": dense_init(kk, (d, kh * hd), dtype=cfg.param_dtype),
+        "wv": dense_init(kv, (d, kh * hd), dtype=cfg.param_dtype),
+        "wo": dense_init(ko, (h * hd, d), dtype=cfg.param_dtype),
+    }
+
+
+GQA_AXES = {
+    "wq": ("embed", "qkv"),
+    "wk": ("embed", "qkv"),
+    "wv": ("embed", "qkv"),
+    "wo": ("qkv", "embed"),
+}
+
+
+def _qkv(cfg, p, x, positions, rope=True):
+    b, t, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = matmul(x, p["wq"]).reshape(b, t, h, hd)
+    k = matmul(x, p["wk"]).reshape(b, t, kh, hd)
+    v = matmul(x, p["wv"]).reshape(b, t, kh, hd)
+    if rope and cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = logical_constraint(q, ("batch", "seq", "heads", "head_dim"))
+    k = logical_constraint(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = logical_constraint(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Tq, H, D)
+    k: jax.Array,  # (B, Tk, KH, D)
+    v: jax.Array,  # (B, Tk, KH, Dv)
+    q_positions: jax.Array,  # (B, Tq) absolute positions
+    kv_positions: jax.Array,  # (B, Tk)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Chunked online-softmax attention; O(chunk²) live memory."""
+    b, tq, h, d = q.shape
+    _, tk, kh, dv = v.shape
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    q_chunk = min(q_chunk, tq)
+    kv_chunk = min(kv_chunk, tk)
+    nq = -(-tq // q_chunk)
+    pad_q = nq * q_chunk - tq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad_q)),
+                              constant_values=-1)
+    nk = -(-tk // kv_chunk)
+    pad_k = nk * kv_chunk - tk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad_k)),
+                               constant_values=2**30)
+
+    # (nq, B, c, KV, G, D) query chunks; scan carries nothing across q chunks.
+    qc = q.reshape(b, nq, q_chunk, kh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    qpos_c = q_positions.reshape(b, nq, q_chunk).transpose(1, 0, 2)
+    kc = k.reshape(b, nk, kv_chunk, kh, d)
+    vc = v.reshape(b, nk, kv_chunk, kh, dv)
+    kpos_c = kv_positions.reshape(b, nk, kv_chunk)
+
+    banded = window is not None and window < tk
+    if banded:
+        band_chunks = -(-window // kv_chunk) + 1
+    else:
+        band_chunks = nk
+
+    def q_step(_, args):
+        qi, qpos = args  # (B, c, KV, G, D), (B, c)
+        m0 = jnp.full((b, kh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_chunk, dv), jnp.float32)
+
+        # Rightmost kv chunk this q chunk can see (causal); band start.
+        if banded:
+            hi = jnp.max(qpos) // kv_chunk  # chunk index of last visible key
+            start = jnp.maximum(hi - (band_chunks - 1), 0)
+            idxs = start + jnp.arange(band_chunks)
+        else:
+            idxs = jnp.arange(nk)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_index_in_dim(kc, j, axis=1, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vc, j, axis=1, keepdims=False)
+            kp = jax.lax.dynamic_index_in_dim(kpos_c, j, axis=1, keepdims=False)
+            # scores: (B, KV, G, cq, ck), f32
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            dposq = qpos[:, None, None, :, None]
+            dposk = kp[:, None, None, None, :]
+            mask = jnp.ones_like(s, dtype=bool)
+            if causal:
+                mask &= dposk <= dposq
+            if window is not None:
+                mask &= dposq - dposk < window
+            mask &= dposq >= 0  # query padding
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), idxs)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KV,G,cq,Dv)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qc, qpos_c))  # (nq,B,cq,KV,G,Dv)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_chunk, h, dv)
+    return out[:, :tq]
+
+
+def gqa_train(cfg, p, x, positions, *, causal=True, window=None,
+              kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+              kv_positions: Optional[jax.Array] = None):
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    b, t, _ = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    if kv_override is None:
+        q, k, v = _qkv(cfg, p, x, positions)
+        kv_positions = positions
+    else:  # cross-attention: q from x, k/v precomputed from the encoder
+        q = matmul(x, p["wq"]).reshape(b, t, h, hd)
+        k, v = kv_override
+    out = flash_attention(q, k, v, positions, kv_positions,
+                          causal=causal, window=window or cfg.window)
+    out = out.reshape(b, t, h * hd)
+    out = matmul(out, p["wo"])
+    return logical_constraint(out, ("batch", "seq", "embed"))
+
+
+def _fill_cache(k: jax.Array, v: jax.Array, max_len: int,
+                window: Optional[int]) -> Tuple[jax.Array, jax.Array]:
+    """Place freshly-computed K/V (B, S, KH, D) into a cache of ``max_len``
+    slots (ring order when windowed)."""
+    b, s = k.shape[:2]
+    if window is not None and max_len <= window:
+        # ring cache: keep the last max_len tokens at slot pos % max_len
+        take = min(s, max_len)
+        kt, vt = k[:, -take:], v[:, -take:]
+        slots = (jnp.arange(s - take, s)) % max_len
+        kc = jnp.zeros((b, max_len) + k.shape[2:], k.dtype).at[:, slots].set(kt)
+        vc = jnp.zeros((b, max_len) + v.shape[2:], v.dtype).at[:, slots].set(vt)
+        return kc, vc
+    pad = max_len - s
+    assert pad >= 0, (s, max_len)
+    kc = jnp.pad(k, ((0, 0), (0, pad)) + ((0, 0),) * (k.ndim - 2))
+    vc = jnp.pad(v, ((0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 2))
+    return kc, vc
+
+
+def gqa_prefill(cfg, p, x, positions, max_len: int, *, window=None):
+    """Full-sequence attention that also returns the populated KV cache."""
+    b, t, _ = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q, k, v = _qkv(cfg, p, x, positions)
+    out = flash_attention(q, k, v, positions, positions,
+                          causal=True, window=window)
+    out = matmul(out.reshape(b, t, h * hd), p["wo"])
+    kc, vc = _fill_cache(k, v, max_len, window)
+    return (logical_constraint(out, ("batch", "seq", "embed")),
+            {"k": kc, "v": vc})
+
+
+# ------------------------------------------------------------- decode (GQA)
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=None):
+    kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dtype = dtype or cfg.dtype
+    return {
+        "k": jnp.zeros((batch, max_len, kh, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kh, hd), dtype),
+    }
+
+
+KV_CACHE_AXES = {
+    "k": ("batch", "seq", "kv_heads", "head_dim"),
+    "v": ("batch", "seq", "kv_heads", "head_dim"),
+}
+
+
+def gqa_decode(cfg, p, x, cache, position, *, window=None):
+    """One-token decode: x (B, 1, d); cache k/v (B, S, KH, D); position (B,)."""
+    b = x.shape[0]
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // kh
+    pos2 = position[:, None]  # (B,1)
+    q, k1, v1 = _qkv(cfg, p, x, pos2)
+    max_len = cache["k"].shape[1]
+    slot = position if window is None else position % window
+    from .perf_flags import FLAGS
+    if FLAGS["scatter_cache_update"]:
+        # indexed scatter: touches B rows instead of rewriting the whole
+        # (B, S, KH, D) cache (numerically exact vs the one-hot blend)
+        bi = jnp.arange(b)
+        k = cache["k"].at[bi, slot].set(k1[:, 0])
+        v = cache["v"].at[bi, slot].set(v1[:, 0])
+    else:
+        oh = jax.nn.one_hot(slot, max_len, dtype=cache["k"].dtype)
+        k = cache["k"] * (1 - oh)[..., None, None] + oh[..., None, None] * k1
+        v = cache["v"] * (1 - oh)[..., None, None] + oh[..., None, None] * v1
+    if window is not None:
+        # Ring buffer (max_len == window): slot i holds the largest absolute
+        # position p ≡ i (mod window) with p <= current position.
+        kv_pos = position[:, None] - jnp.mod(
+            position[:, None] - jnp.arange(max_len)[None, :], max_len)
+        valid = kv_pos >= 0  # slots not yet written
+    else:
+        kv_pos = jnp.arange(max_len)[None, :]
+        valid = kv_pos <= position[:, None]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q.reshape(b, 1, kh, g, hd), k,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    out = matmul(out, p["wo"])
+    return logical_constraint(out, ("batch", "seq", "embed")), {"k": k, "v": v}
+
+
+# ===================================================================== MLA
+def init_mla(cfg, key):
+    """DeepSeek-V2 multi-head latent attention."""
+    d = cfg.d_model
+    h = cfg.n_heads
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dvh = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], (d, qr), dtype=cfg.param_dtype),
+        "wq_b": dense_init(ks[1], (qr, h * (dn + dr)), dtype=cfg.param_dtype),
+        "wkv_a": dense_init(ks[2], (d, r + dr), dtype=cfg.param_dtype),
+        "wk_b": dense_init(ks[3], (r, h * dn), dtype=cfg.param_dtype),
+        "wv_b": dense_init(ks[4], (r, h * dvh), dtype=cfg.param_dtype),
+        "wo": dense_init(ks[5], (h * dvh, d), dtype=cfg.param_dtype),
+        "norm_kv": jnp.zeros((r,), cfg.param_dtype),
+        "norm_q": jnp.zeros((qr,), cfg.param_dtype),
+    }
+
+
+MLA_AXES = {
+    "wq_a": ("embed", "kv_lora"),
+    "wq_b": ("kv_lora", "qkv"),
+    "wkv_a": ("embed", "kv_lora"),
+    "wk_b": ("kv_lora", "qkv"),
+    "wv_b": ("kv_lora", "qkv"),
+    "wo": ("qkv", "embed"),
+    "norm_kv": ("kv_lora",),
+    "norm_q": ("kv_lora",),
+}
+
+
+def _rms(x, scale):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def _mla_qkv(cfg, p, x, positions):
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dvh = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    cq = _rms(matmul(x, p["wq_a"]), p["norm_q"])
+    q = matmul(cq, p["wq_b"]).reshape(b, t, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = matmul(x, p["wkv_a"])
+    c_kv = _rms(kv[..., :r], p["norm_kv"])  # (B,T,r) — the cached latent
+    k_rope = apply_rope(kv[..., r:].reshape(b, t, 1, dr), positions,
+                        cfg.rope_theta)  # shared across heads
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_train(cfg, p, x, positions, *, causal=True):
+    """Decompressed MLA: expand latents to per-head K/V, run flash attention."""
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dvh = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+    k_nope = matmul(c_kv, p["wk_b"]).reshape(b, t, h, dn)
+    v = matmul(c_kv, p["wv_b"]).reshape(b, t, h, dvh)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, t, h, dr))], -1)
+    out = flash_attention(q, k, v, positions, positions, causal=causal,
+                          scale=1.0 / math.sqrt(dn + dr))
+    out = matmul(out.reshape(b, t, h * dvh), p["wo"])
+    return logical_constraint(out, ("batch", "seq", "embed"))
+
+
+def mla_prefill(cfg, p, x, positions, max_len: int):
+    """Decompressed-attention prefill that returns the latent cache."""
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dvh = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+    k_nope = matmul(c_kv, p["wk_b"]).reshape(b, t, h, dn)
+    v = matmul(c_kv, p["wv_b"]).reshape(b, t, h, dvh)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, t, h, dr))], -1)
+    out = flash_attention(q, k, v, positions, positions, causal=True,
+                          scale=1.0 / math.sqrt(dn + dr))
+    out = matmul(out.reshape(b, t, h * dvh), p["wo"])
+    pad = max_len - t
+    cache = {
+        "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+        "k_rope": jnp.pad(k_rope[:, :, 0], ((0, 0), (0, pad), (0, 0))),
+    }
+    return logical_constraint(out, ("batch", "seq", "embed")), cache
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+    }
+
+
+MLA_CACHE_AXES = {
+    "c_kv": ("batch", "seq", "kv_lora"),
+    "k_rope": ("batch", "seq", "head_dim"),
+}
+
+
+def mla_decode(cfg, p, x, cache, position):
+    """Absorbed-form decode: scores in the latent space, cache stores latents.
+
+    score(h, t) = (q_nope[h] @ W_uk[h])·c_kv[t] + q_rope[h]·k_rope[t]
+    out(h)      = (Σ_t w[t]·c_kv[t]) @ W_uv[h]
+    so per-token cache traffic is r + dr (=576) instead of h·(dn+dvh) (=32768).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dvh = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    q_nope, q_rope, c_kv1, k_rope1 = _mla_qkv(cfg, p, x, position[:, None])
+    # absorb W_uk into q: (B,1,H,dn) @ (r, H*dn) -> (B,1,H,r)
+    wk_b = p["wk_b"].astype(x.dtype).reshape(r, h, dn)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk_b,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    max_len = cache["c_kv"].shape[1]
+    from .perf_flags import FLAGS
+    if FLAGS["scatter_cache_update"]:
+        bi = jnp.arange(b)
+        c_kv = cache["c_kv"].at[bi, position].set(c_kv1[:, 0])
+        k_rope = cache["k_rope"].at[bi, position].set(k_rope1[:, 0, 0])
+    else:
+        oh = jax.nn.one_hot(position, max_len, dtype=cache["c_kv"].dtype)
+        c_kv = (cache["c_kv"] * (1 - oh)[..., None]
+                + oh[..., None] * c_kv1[:, 0][:, None])
+        k_rope = (cache["k_rope"] * (1 - oh)[..., None]
+                  + oh[..., None] * k_rope1[:, 0, 0][:, None])
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope,
+                      preferred_element_type=jnp.float32)) / math.sqrt(dn + dr)
+    valid = jnp.arange(max_len)[None, :] <= position[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", w.astype(c_kv.dtype), c_kv,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    wv_b = p["wv_b"].astype(x.dtype).reshape(r, h, dvh)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wv_b,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = matmul(out.reshape(b, 1, h * dvh), p["wo"])
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    return logical_constraint(out, ("batch", "seq", "embed")), new_cache

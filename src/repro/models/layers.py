@@ -1,0 +1,155 @@
+"""Shared primitive layers: norms, embeddings, MLPs, RoPE.
+
+Pure-functional: ``init_*`` returns a params dict; ``apply`` functions take
+(params, x).  All matmuls accumulate in f32 (``preferred_element_type``) and
+cast back to the activation dtype — the standard bf16 training recipe.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.axes import logical_constraint
+
+Initializer = jax.nn.initializers.Initializer
+
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    """LeCun-normal fan-in init (what most LM codebases use)."""
+    return jax.nn.initializers.lecun_normal(in_axis=in_axis, out_axis=-1)(
+        key, shape, dtype
+    )
+
+
+def matmul(x: jax.Array, w: jax.Array, dtype=None) -> jax.Array:
+    """x @ w with f32 accumulation; contracts the last dim of x with dim 0 of w.
+
+    With perf_flags.bf16_collective_matmul the dot's OUTPUT dtype is the
+    activation dtype, so the TP all-reduce GSPMD inserts after row-parallel
+    partials moves bf16 instead of f32 (per-shard MXU accumulation stays
+    f32 internally).
+    """
+    from .perf_flags import FLAGS
+
+    out_dtype = dtype or x.dtype
+    pet = out_dtype if (FLAGS["bf16_collective_matmul"]
+                        and dtype is None) else jnp.float32
+    out = jax.lax.dot_general(
+        x, w.astype(x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=pet,
+    )
+    return out.astype(out_dtype)
+
+
+# ----------------------------------------------------------------- norms
+def init_norm(cfg, d: int):
+    p = {"scale": jnp.zeros((d,), cfg.param_dtype)}
+    if cfg.norm_kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.param_dtype)
+    return p
+
+
+def apply_norm(cfg, p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * (1.0 + p["scale"].astype(jnp.float32)) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm (zero-centered scale, gemma convention)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+NORM_AXES = {"scale": ("embed",), "bias": ("embed",)}
+
+
+# ----------------------------------------------------------------- embedding
+def init_embed(cfg, key):
+    emb = jax.nn.initializers.normal(1.0)(key, (cfg.vocab_size, cfg.d_model),
+                                           cfg.param_dtype)
+    return {"table": emb}
+
+
+EMBED_AXES = {"table": ("vocab", "embed")}
+
+
+def embed_tokens(cfg, p, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["table"].astype(cfg.dtype), tokens, axis=0)
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)  # gemma input scaling
+    return logical_constraint(x, ("batch", "seq", "embed"))
+
+
+def unembed(cfg, p, x: jax.Array) -> jax.Array:
+    """Project to vocab logits (tied or untied head)."""
+    logits = matmul(x, p["table"].T if "table" in p else p["kernel"],
+                    dtype=jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logical_constraint(logits, ("batch", "seq", "vocab"))
+
+
+# ----------------------------------------------------------------- MLP
+def init_mlp(cfg, key, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "wi_gate": dense_init(k1, (d, f), dtype=cfg.param_dtype),
+            "wi_up": dense_init(k2, (d, f), dtype=cfg.param_dtype),
+            "wo": dense_init(k3, (f, d), dtype=cfg.param_dtype),
+        }
+    return {  # plain gelu MLP (whisper, stablelm-style)
+        "wi": dense_init(k1, (d, f), dtype=cfg.param_dtype),
+        "wo": dense_init(k2, (f, d), dtype=cfg.param_dtype),
+    }
+
+
+MLP_AXES = {
+    "wi_gate": ("embed", "mlp"),
+    "wi_up": ("embed", "mlp"),
+    "wi": ("embed", "mlp"),
+    "wo": ("mlp", "embed"),
+}
+
+
+def apply_mlp(cfg, p, x: jax.Array) -> jax.Array:
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else (
+            lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(matmul(x, p["wi_gate"])) * matmul(x, p["wi_up"])
+    else:
+        h = jax.nn.gelu(matmul(x, p["wi"]), approximate=True)
+    h = logical_constraint(h, ("batch", "seq", "mlp"))
+    out = matmul(h, p["wo"])
+    return logical_constraint(out, ("batch", "seq", "embed"))
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- positional (learned, whisper)
+def init_learned_pos(cfg, key, n_ctx: int):
+    return {"pos": jax.nn.initializers.normal(0.02)(key, (n_ctx, cfg.d_model),
+                                                     cfg.param_dtype)}

@@ -1,0 +1,83 @@
+"""Model bundle: closes an ArchConfig over the transformer assembly, and the
+analytic parameter counters used by the roofline (MODEL_FLOPS = 6·N·D).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .common import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- parameters -------------------------------------------------------
+    def init(self, key) -> Any:
+        return transformer.init_params(self.cfg, key)
+
+    def abstract_params(self) -> Any:
+        return jax.eval_shape(lambda k: transformer.init_params(self.cfg, k),
+                              jax.random.key(0))
+
+    def params_axes(self) -> Any:
+        return transformer.params_axes(self.cfg)
+
+    # -- steps ------------------------------------------------------------
+    def forward(self, params, tokens, extra=None):
+        return transformer.forward(self.cfg, params, tokens, extra)
+
+    def loss(self, params, batch):
+        return transformer.lm_loss(self.cfg, params, batch)
+
+    def prefill(self, params, tokens, max_len=None, extra=None):
+        return transformer.prefill(self.cfg, params, tokens, max_len, extra)
+
+    def decode_step(self, params, cache, tokens, positions):
+        return transformer.decode_step(self.cfg, params, cache, tokens,
+                                       positions)
+
+    def init_cache(self, batch, max_len):
+        return transformer.init_cache(self.cfg, batch, max_len)
+
+    def cache_axes(self):
+        return transformer.cache_axes(self.cfg)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------- counting
+def _leaf_sizes_with_path(cfg) -> Dict[str, int]:
+    import math
+
+    shapes = jax.eval_shape(
+        lambda k: transformer.init_params(cfg, k), jax.random.key(0))
+    out = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        # python ints: jnp.prod would overflow int32 on mixtral experts
+        out[jax.tree_util.keystr(path)] = math.prod(leaf.shape)
+    return out
+
+
+_EXPERT_KEYS = ("'mlp']['wi_gate'", "'mlp']['wi_up'", "'mlp']['wo'")
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Total parameters; active_only scales routed-expert params by
+    (top_k / n_experts) — the per-token activated fraction (MoE)."""
+    sizes = _leaf_sizes_with_path(cfg)
+    total = 0
+    for path, n in sizes.items():
+        if (active_only and cfg.is_moe and any(k in path for k in _EXPERT_KEYS)
+                and "'shared'" not in path):
+            n = int(n * cfg.top_k / cfg.n_experts)
+        total += n
+    return total

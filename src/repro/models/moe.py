@@ -1,0 +1,194 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+Dense one-hot dispatch einsums are impossible at deepseek scale (160 experts
+× 1M tokens), so dispatch is the sort-based scheme production MoE stacks use:
+
+  router logits -> top_k -> flatten (token, expert) assignments ->
+  argsort by expert id -> position-in-expert via a running count ->
+  gather tokens into an (E, C, d) buffer (capacity-dropped) ->
+  batched expert matmuls (einsum over the E dim) ->
+  scatter-add back weighted by router probs.
+
+Sharding: the expert dim maps to the "model" mesh axis when divisible
+(deepseek: 160/16 experts per group -> expert parallelism with all-to-all
+inserted by XLA at the gather/scatter); otherwise the expert-mlp dim shards
+(mixtral: 8 experts, d_ff 14336/16 -> tensor-parallel experts).  Both come
+out of the same logical-axis rules table — no per-arch code.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.axes import logical_constraint
+
+from .layers import dense_init, matmul
+
+
+def init_moe(cfg, key):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, kg, ku, ko, ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(kr, (d, e), dtype=cfg.param_dtype),
+        "wi_gate": dense_init(kg, (e, d, f), in_axis=-2, dtype=cfg.param_dtype),
+        "wi_up": dense_init(ku, (e, d, f), in_axis=-2, dtype=cfg.param_dtype),
+        "wo": dense_init(ko, (e, f, d), in_axis=-2, dtype=cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks, 3)
+        p["shared"] = {
+            "wi_gate": dense_init(k1, (d, fs), dtype=cfg.param_dtype),
+            "wi_up": dense_init(k2, (d, fs), dtype=cfg.param_dtype),
+            "wo": dense_init(k3, (fs, d), dtype=cfg.param_dtype),
+        }
+    return p
+
+
+MOE_AXES = {
+    "router": ("embed", "expert"),
+    "wi_gate": ("expert", "embed", "expert_mlp"),
+    "wi_up": ("expert", "embed", "expert_mlp"),
+    "wo": ("expert", "expert_mlp", "embed"),
+    "shared": {
+        "wi_gate": ("embed", "mlp"),
+        "wi_up": ("embed", "mlp"),
+        "wo": ("mlp", "embed"),
+    },
+}
+
+
+def _dispatch_groups(t: int) -> int:
+    """Group-local dispatch width = DP degree of the installed mesh.
+
+    Dispatch (sort, capacity, gather/scatter) happens independently per
+    data-parallel group, so no (T·k, d) tensor ever materializes globally:
+    intermediates carry a leading group dim sharded over ("pod","data").
+    This is the standard production MoE layout (local top-k + capacitied
+    all-to-all); with no mesh installed (CPU smoke tests) D = 1 and the
+    math reduces to the global dispatch.
+    """
+    from repro.sharding.axes import DEFAULT_RULES, current_mesh
+
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    shape = dict(mesh.shape)
+    for cand in DEFAULT_RULES["batch"]:
+        axes = cand if isinstance(cand, tuple) else (cand,)
+        size = 1
+        for a in axes:
+            size *= shape.get(a, 1)
+        if size > 1 and t % size == 0:
+            return size
+    return 1
+
+
+def apply_moe(cfg, p, x: jax.Array, capacity: Optional[int] = None) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).  Group-local sort-based capacity dispatch."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    g = _dispatch_groups(t)
+    tl = t // g  # tokens per dispatch group
+    xf = x.reshape(g, tl, d)
+    xf = logical_constraint(xf, ("batch", None, "embed"))
+
+    logits = matmul(xf, p["router"], dtype=jnp.float32)  # (G, Tl, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (G, Tl, k)
+    top_p = top_p / jnp.sum(top_p, -1, keepdims=True)  # renormalize over top_k
+
+    al = tl * k  # assignments per group
+    if capacity is None:
+        capacity = int(cfg.capacity_factor * tl * k / e)
+        capacity = max(8, -(-capacity // 8) * 8)
+    capacity = min(capacity, al)
+
+    # flatten assignments within each group: (G, Al)
+    flat_e = top_e.reshape(g, al)
+    flat_t = jnp.broadcast_to(jnp.repeat(jnp.arange(tl), k)[None], (g, al))
+    flat_w = top_p.reshape(g, al)
+
+    # stable sort by expert id within the group
+    order = jnp.argsort(flat_e, axis=1, stable=True)  # (G, Al)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st = jnp.take_along_axis(flat_t, order, axis=1)
+    sw = jnp.take_along_axis(flat_w, order, axis=1)
+    # position within the expert's run = index - first index of that expert
+    first = jax.vmap(lambda row: jnp.searchsorted(row, row, side="left"))(se)
+    pos_in_e = jnp.arange(al)[None, :] - first
+    keep = pos_in_e < capacity  # capacity-drop overflow
+
+    # gather tokens into the (G, E, C, d) dispatch buffer.  Slot indices are
+    # strictly increasing and unique per group -> scatter lowers to a plain
+    # masked write, not a sort network.
+    slot = jnp.where(keep, se * capacity + pos_in_e, e * capacity)
+    # All gathers/scatters are vmapped over the group axis: they lower to
+    # gather/scatter with operand BATCHING dims, which GSPMD partitions on
+    # the (data-sharded) group dim — with the group index passed as *data*
+    # (buf.at[gi, slot]) the partitioner cannot prove locality and
+    # replicates the whole (G, Al, d) tensor across the mesh.
+    src = jax.vmap(lambda xr, i: xr[i])(xf, st)  # (G, Al, d)
+    src = logical_constraint(src, ("batch", None, "embed"))
+    buf = jax.vmap(lambda s_r, sl_r: jnp.zeros(
+        (e * capacity + 1, d), x.dtype).at[sl_r].set(
+            s_r, unique_indices=True, indices_are_sorted=True))(src, slot)
+    buf = buf[:, :-1].reshape(g, e, capacity, d)
+    # build the buffer DATA-LOCAL (scatter never crosses the expert
+    # sharding), then reshard to the expert-parallel layout in one step —
+    # GSPMD lowers the second constraint to the dispatch all-to-all instead
+    # of a masked all-reduce of the full (G, Al, d) tensor
+    buf = logical_constraint(buf, ("batch", None, None, "embed"))
+    buf = logical_constraint(buf, ("batch", "expert", None, "embed"))
+
+    # batched expert FFN (swiglu); expert dim model-sharded when divisible.
+    # bf16_collective_matmul: einsum outputs in activation dtype, so the
+    # BACKWARD cotangents crossing the dispatch reshard move bf16, not f32
+    # (fwd buffers are already bf16; the f32 path came from d(astype) of
+    # f32-output einsums).
+    from .perf_flags import FLAGS
+    pet = x.dtype if FLAGS["bf16_collective_matmul"] else jnp.float32
+    h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf,
+                                p["wi_gate"].astype(x.dtype),
+                                preferred_element_type=pet))
+         * jnp.einsum("gecd,edf->gecf", buf, p["wi_up"].astype(x.dtype),
+                      preferred_element_type=pet)).astype(x.dtype)
+    h = logical_constraint(h, ("batch", "expert", None, "expert_mlp"))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype),
+                         preferred_element_type=pet).astype(x.dtype)
+    out_buf = logical_constraint(out_buf, ("batch", "expert", None, "embed"))
+
+    # combine: reshard back to data-local (the return all-to-all), THEN
+    # gather — keeps the gather shard-local, mirroring the dispatch side
+    out_buf = logical_constraint(out_buf, ("batch", None, None, "embed"))
+    flat_out = out_buf.reshape(g, e * capacity, d)
+    clipped = jnp.minimum(slot, e * capacity - 1)
+    gathered = jax.vmap(lambda fo, i: fo[i])(flat_out, clipped)
+    gathered = jnp.where(keep[..., None],
+                         gathered * sw[..., None].astype(x.dtype), 0)
+    out = jax.vmap(lambda val, i: jnp.zeros((tl, d), x.dtype).at[i].add(val)
+                   )(gathered, st)
+    out = logical_constraint(out, ("batch", None, "embed"))
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        hs = jax.nn.silu(matmul(xf, sp["wi_gate"])) * matmul(xf, sp["wi_up"])
+        out = out + matmul(hs, sp["wo"])
+
+    out = out.reshape(b, s, d)
+    return logical_constraint(out, ("batch", "seq", "embed"))
+
+
+def router_aux_loss(cfg, logits: jax.Array, top_e: jax.Array) -> jax.Array:
+    """Standard load-balance auxiliary loss (Switch-style)."""
+    e = cfg.n_experts
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    ce = jnp.mean(
+        jax.nn.one_hot(top_e, e, dtype=jnp.float32).sum(1), axis=0
+    ) / cfg.top_k  # fraction of tokens per expert
+    return e * jnp.sum(me * ce)

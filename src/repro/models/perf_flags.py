@@ -1,0 +1,44 @@
+"""Beyond-paper performance toggles (EXPERIMENTS.md §Perf).
+
+Each flag is one hypothesis→change→measure iteration; defaults are the
+PAPER-FAITHFUL BASELINE semantics so the recorded baseline table stays
+reproducible.  The dry-run's ``--opt`` mode enables them stepwise and
+records before/after.
+
+* ``scatter_cache_update`` — decode writes the new token's K/V with an
+  indexed scatter instead of a one-hot blend.  The blend reads+writes the
+  FULL (B, S, KH, D) cache per token (~420 GB/step for gemma decode_32k);
+  the scatter touches B rows.  Numerically exact — enabled in the
+  optimized config.
+* ``bf16_weight_gather`` — cast f32 master weights to bf16 BEFORE the
+  FSDP all-gather (cast-then-gather): halves weight-gather collective
+  bytes.  bf16 weights at use is standard mixed precision (same numerics
+  as the eventual astype at the matmul).
+* ``bf16_collective_matmul`` — dot outputs in activation dtype so GSPMD's
+  TP all-reduce of row-parallel partials moves bf16, not f32: halves the
+  TP-activation collective bytes.  Numerics: per-shard MXU accumulation is
+  still f32 internally; the cross-shard sum rounds to bf16 (MaxText-
+  default behavior).
+"""
+
+FLAGS = {
+    # default ON: numerically exact, strictly less traffic (B rows vs the
+    # full cache per decode token); the one-hot baseline stays selectable
+    "scatter_cache_update": True,
+    "bf16_weight_gather": False,
+    "bf16_collective_matmul": False,
+}
+
+
+def set_flags(**kw) -> dict:
+    prev = dict(FLAGS)
+    for k, v in kw.items():
+        if k not in FLAGS:
+            raise KeyError(k)
+        FLAGS[k] = v
+    return prev
+
+
+def optimized() -> dict:
+    return set_flags(scatter_cache_update=True, bf16_weight_gather=True,
+                     bf16_collective_matmul=True)

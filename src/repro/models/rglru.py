@@ -1,0 +1,130 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Temporal mixing: up-proj to two branches; the recurrent branch goes through a
+width-4 causal temporal conv then the Real-Gated LRU:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(c * r_t * log(sigmoid(Λ)))  (elementwise decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The recurrence is a diagonal linear scan -> ``jax.lax.associative_scan``
+(parallel, O(log T) depth) for train/prefill — the TPU-native adaptation of
+Griffin's custom GPU scan kernel — and an O(1) state update for decode.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.axes import logical_constraint
+
+from .layers import dense_init, matmul
+
+_C = 8.0  # decay sharpness constant from the Griffin paper
+
+
+def init_rglru(cfg, key):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Λ init so that a = sigmoid(Λ)^c is uniform in [0.9, 0.999] (paper App. A)
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(u ** (1.0 / _C) / (1.0 - u ** (1.0 / _C)))
+    return {
+        "w_up_x": dense_init(ks[0], (d, w), dtype=cfg.param_dtype),
+        "w_up_gate": dense_init(ks[1], (d, w), dtype=cfg.param_dtype),
+        "conv_w": jax.nn.initializers.normal(0.02)(
+            ks[2], (cfg.rglru_conv_width, w), cfg.param_dtype),
+        "conv_b": jnp.zeros((w,), cfg.param_dtype),
+        "w_a": dense_init(ks[3], (w, w), dtype=cfg.param_dtype),
+        "b_a": jnp.zeros((w,), cfg.param_dtype),
+        "w_i": dense_init(ks[4], (w, w), dtype=cfg.param_dtype),
+        "b_i": jnp.zeros((w,), cfg.param_dtype),
+        "lam": lam.astype(cfg.param_dtype),
+        "w_down": dense_init(jax.random.fold_in(key, 7), (w, d),
+                             dtype=cfg.param_dtype),
+    }
+
+
+RGLRU_AXES = {
+    "w_up_x": ("embed", "mlp"),
+    "w_up_gate": ("embed", "mlp"),
+    "conv_w": ("conv", "mlp"),
+    "conv_b": ("mlp",),
+    "w_a": ("mlp", None),
+    "b_a": ("mlp",),
+    "w_i": ("mlp", None),
+    "b_i": ("mlp",),
+    "lam": ("mlp",),
+    "w_down": ("mlp", "embed"),
+}
+
+
+def _causal_conv(p, x: jax.Array, state: jax.Array = None):
+    """Width-W causal depthwise conv over time.  x: (B, T, w)."""
+    kw = p["conv_w"].shape[0]
+    w = p["conv_w"].astype(x.dtype)
+    if state is not None:  # decode: state (B, kw-1, w)
+        full = jnp.concatenate([state, x], axis=1)
+        out = sum(full[:, i:i + x.shape[1]] * w[i] for i in range(kw))
+        return out + p["conv_b"].astype(x.dtype), full[:, -(kw - 1):]
+    pad = jnp.pad(x, ((0, 0), (kw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(kw))
+    return out + p["conv_b"].astype(x.dtype), pad[:, -(kw - 1):]
+
+
+def _gates(p, xc: jax.Array):
+    r = jax.nn.sigmoid(matmul(xc, p["w_a"], dtype=jnp.float32)
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(matmul(xc, p["w_i"], dtype=jnp.float32)
+                       + p["b_i"].astype(jnp.float32))
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, beta * i * xc.astype(jnp.float32)
+
+
+def rglru_train(cfg, p, x: jax.Array, return_state: bool = False):
+    """x: (B, T, d) -> (B, T, d); parallel associative scan over T."""
+    gate = jax.nn.gelu(matmul(x, p["w_up_gate"]), approximate=True)
+    xb = matmul(x, p["w_up_x"])
+    xc, conv_tail = _causal_conv(p, xb)
+    a, b = _gates(p, xc)  # (B, T, w) f32 each
+    # diagonal linear recurrence h_t = a_t h_{t-1} + b_t
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, ar * bl + br
+    _, hf = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = hf.astype(x.dtype)
+    h = logical_constraint(h, ("batch", "seq", "mlp"))
+    out = matmul(h * gate, p["w_down"])
+    out = logical_constraint(out, ("batch", "seq", "embed"))
+    if return_state:
+        return out, {"h": hf[:, -1], "conv": conv_tail}
+    return out
+
+
+def init_rglru_state(cfg, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, w), dtype),
+    }
+
+
+RGLRU_STATE_AXES = {"h": ("batch", "mlp"), "conv": ("batch", None, "mlp")}
+
+
+def rglru_decode(cfg, p, x: jax.Array, state) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, d); O(1) state update."""
+    gate = jax.nn.gelu(matmul(x, p["w_up_gate"]), approximate=True)
+    xb = matmul(x, p["w_up_x"])
+    xc, conv_state = _causal_conv(p, xb, state["conv"])
+    a, b = _gates(p, xc)  # (B, 1, w)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = matmul(h[:, None].astype(x.dtype) * gate, p["w_down"])
+    return out, {"h": h, "conv": conv_state}

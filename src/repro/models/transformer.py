@@ -1,0 +1,514 @@
+"""Model assembly: decoder-only LM and encoder-decoder stacks.
+
+The layer stack is organized as ``n_groups`` repetitions of
+``cfg.block_pattern`` (e.g. recurrentgemma: ("rglru","rglru","local_attn")).
+All group params are *stacked* along a leading n_groups axis and the stack is
+a single ``jax.lax.scan`` — one compact HLO loop regardless of depth, which
+is what keeps 60-layer MoE compile times sane on the dry-run host.
+
+Block kinds: attn | local_attn | swa | rglru | mlstm | slstm.
+Each block is pre-norm residual: x += mix(norm(x)); x += mlp(norm(x)) (the
+MLP sublayer is skipped when cfg.d_ff == 0 / mlp_kind == "none"; MoE configs
+use the MoE FFN instead of the dense MLP).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.axes import logical_constraint
+
+from . import attention as attn
+from . import frontends, moe, rglru, xlstm
+from .layers import (
+    EMBED_AXES,
+    MLP_AXES,
+    NORM_AXES,
+    apply_mlp,
+    apply_norm,
+    dense_init,
+    embed_tokens,
+    init_embed,
+    init_learned_pos,
+    init_mlp,
+    init_norm,
+    matmul,
+    unembed,
+)
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ init
+def _init_block(cfg, kind: str, key) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm_mix": init_norm(cfg, cfg.d_model)}
+    if kind in ("attn", "local_attn", "swa"):
+        p["mix"] = attn.init_mla(cfg, ks[0]) if cfg.use_mla else attn.init_gqa(cfg, ks[0])
+    elif kind == "rglru":
+        p["mix"] = rglru.init_rglru(cfg, ks[0])
+    elif kind == "mlstm":
+        p["mix"] = xlstm.init_mlstm(cfg, ks[0])
+    elif kind == "slstm":
+        p["mix"] = xlstm.init_slstm(cfg, ks[0])
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if _has_mlp(cfg):
+        p["norm_mlp"] = init_norm(cfg, cfg.d_model)
+        p["mlp"] = moe.init_moe(cfg, ks[1]) if cfg.is_moe else init_mlp(cfg, ks[1])
+    if cfg.is_encoder_decoder:  # decoder cross-attention sublayer
+        p["norm_cross"] = init_norm(cfg, cfg.d_model)
+        p["cross"] = attn.init_gqa(cfg, ks[2])
+    return p
+
+
+def _has_mlp(cfg) -> bool:
+    return cfg.d_ff > 0 and cfg.mlp_kind != "none"
+
+
+def _block_axes(cfg, kind: str):
+    ax: Dict[str, Any] = {"norm_mix": NORM_AXES if cfg.norm_kind == "layernorm"
+                          else {"scale": ("embed",)}}
+    norm_ax = ax["norm_mix"]
+    if kind in ("attn", "local_attn", "swa"):
+        ax["mix"] = attn.MLA_AXES if cfg.use_mla else attn.GQA_AXES
+    elif kind == "rglru":
+        ax["mix"] = rglru.RGLRU_AXES
+    elif kind == "mlstm":
+        ax["mix"] = xlstm.MLSTM_AXES
+    elif kind == "slstm":
+        ax["mix"] = xlstm.SLSTM_AXES
+    if _has_mlp(cfg):
+        ax["norm_mlp"] = norm_ax
+        if cfg.is_moe:
+            ax["mlp"] = {k: v for k, v in moe.MOE_AXES.items()
+                         if k != "shared" or cfg.n_shared_experts}
+        else:
+            ax["mlp"] = {
+                k: MLP_AXES[k] for k in
+                (("wi_gate", "wi_up", "wo")
+                 if cfg.mlp_kind in ("swiglu", "geglu") else ("wi", "wo"))
+            }
+    if cfg.is_encoder_decoder:
+        ax["norm_cross"] = norm_ax
+        ax["cross"] = attn.GQA_AXES
+    return ax
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg, key) -> Params:
+    keys = jax.random.split(key, cfg.n_groups + 8)
+    groups = _stack([
+        {f"b{j}_{kind}": _init_block(cfg, kind, jax.random.fold_in(keys[g], j))
+         for j, kind in enumerate(cfg.block_pattern)}
+        for g in range(cfg.n_groups)
+    ])
+    p: Params = {
+        "embed": init_embed(cfg, keys[-1]),
+        "groups": groups,
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = {"kernel": dense_init(keys[-2], (cfg.d_model, cfg.vocab_size),
+                                          dtype=cfg.param_dtype)}
+    if cfg.frontend:
+        p["frontend"] = frontends.init_frontend(cfg, keys[-3])
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(keys[-4], cfg.n_encoder_layers)
+        enc_cfg = cfg  # encoder blocks reuse GQA + MLP at the same width
+        p["encoder"] = {
+            "layers": _stack([{
+                "norm_mix": init_norm(cfg, cfg.d_model),
+                "mix": attn.init_gqa(enc_cfg, ek),
+                "norm_mlp": init_norm(cfg, cfg.d_model),
+                "mlp": init_mlp(cfg, jax.random.fold_in(ek, 1)),
+            } for ek in enc_keys]),
+            "pos": init_learned_pos(cfg, keys[-5], cfg.encoder_ctx),
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+        p["dec_pos"] = init_learned_pos(cfg, keys[-6], 8192)
+    return p
+
+
+def params_axes(cfg) -> Any:
+    """Logical-axes pytree matching init_params (leading group dim -> None)."""
+
+    def lift(ax_tree):  # prepend the stacked-groups axis
+        return jax.tree.map(lambda t: ("layers",) + tuple(t), ax_tree,
+                            is_leaf=lambda t: isinstance(t, tuple))
+
+    groups_ax = lift({f"b{j}_{kind}": _block_axes(cfg, kind)
+                      for j, kind in enumerate(cfg.block_pattern)})
+    ax: Dict[str, Any] = {
+        "embed": EMBED_AXES,
+        "groups": groups_ax,
+        "final_norm": {"scale": ("embed",)} if cfg.norm_kind != "layernorm"
+        else NORM_AXES,
+    }
+    if not cfg.tie_embeddings:
+        ax["head"] = {"kernel": ("embed", "vocab")}
+    if cfg.frontend:
+        ax["frontend"] = frontends.FRONTEND_AXES
+    if cfg.is_encoder_decoder:
+        enc_block_ax = {
+            "norm_mix": NORM_AXES, "mix": attn.GQA_AXES,
+            "norm_mlp": NORM_AXES,
+            "mlp": {"wi": MLP_AXES["wi"], "wo": MLP_AXES["wo"]},
+        }
+        ax["encoder"] = {
+            "layers": lift(enc_block_ax),
+            "pos": {"pos": ("seq", "embed")},
+            "final_norm": NORM_AXES,
+        }
+        ax["dec_pos"] = {"pos": ("seq", "embed")}
+    return ax
+
+
+# ------------------------------------------------------------------ forward
+def _mix_train(cfg, kind, bp, x, positions, enc_kv=None):
+    h = apply_norm(cfg, bp["norm_mix"], x)
+    if kind in ("attn", "local_attn", "swa"):
+        window = cfg.window if kind in ("local_attn", "swa") else None
+        if cfg.use_mla:
+            out = attn.mla_train(cfg, bp["mix"], h, positions)
+        else:
+            out = attn.gqa_train(cfg, bp["mix"], h, positions, window=window)
+    elif kind == "rglru":
+        out = rglru.rglru_train(cfg, bp["mix"], h)
+    elif kind == "mlstm":
+        out = xlstm.mlstm_train(cfg, bp["mix"], h)
+    else:  # slstm
+        out = xlstm.slstm_train(cfg, bp["mix"], h)
+    x = x + out
+    if cfg.is_encoder_decoder and enc_kv is not None:
+        h = apply_norm(cfg, bp["norm_cross"], x)
+        x = x + attn.gqa_train(cfg, bp["cross"], h, positions, causal=False,
+                               kv_override=enc_kv[0], kv_positions=enc_kv[1])
+    if _has_mlp(cfg):
+        h = apply_norm(cfg, bp["norm_mlp"], x)
+        ff = moe.apply_moe(cfg, bp["mlp"], h) if cfg.is_moe \
+            else apply_mlp(cfg, bp["mlp"], h)
+        x = x + ff
+    return x
+
+
+def _group_train(cfg, gp, x, positions, enc_out=None, enc_positions=None):
+    for j, kind in enumerate(cfg.block_pattern):
+        bp = gp[f"b{j}_{kind}"]
+        enc_kv = None
+        if cfg.is_encoder_decoder and enc_out is not None:
+            b, te, _ = enc_out.shape
+            kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+            k = matmul(enc_out, bp["cross"]["wk"]).reshape(b, te, kh, hd)
+            v = matmul(enc_out, bp["cross"]["wv"]).reshape(b, te, kh, hd)
+            enc_kv = ((k, v), enc_positions)
+        x = _mix_train(cfg, kind, bp, x, positions, enc_kv)
+    return x
+
+
+def _dec_pos_embed(cfg, params, s: int) -> jax.Array:
+    """Learned decoder positions, clamped to the table size (the assigned
+    decode/prefill shapes mechanically exceed whisper's native context)."""
+    table = params["dec_pos"]["pos"].astype(cfg.dtype)
+    idx = jnp.minimum(jnp.arange(s), table.shape[0] - 1)
+    return jnp.take(table, idx, axis=0)[None]
+
+
+def run_encoder(cfg, params, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings (B, Te, d)."""
+    enc = params["encoder"]
+    x = frames.astype(cfg.dtype) + enc["pos"]["pos"].astype(cfg.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+
+    def layer(x, lp):
+        h = apply_norm(cfg, lp["norm_mix"], x)
+        x = x + attn.gqa_train(cfg, lp["mix"], h, pos, causal=False)
+        h = apply_norm(cfg, lp["norm_mlp"], x)
+        return x + apply_mlp(cfg, lp["mlp"], h), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda c, lp: layer(c, lp), x, enc["layers"])
+    else:
+        n = jax.tree.leaves(enc["layers"])[0].shape[0]
+        for i in range(n):
+            x, _ = layer(x, jax.tree.map(lambda a: a[i], enc["layers"]))
+    return apply_norm(cfg, enc["final_norm"], x)
+
+
+def forward(cfg, params, tokens: jax.Array,
+            extra: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
+    """Full-sequence logits (training).  tokens: (B, S) -> (B, S, V) f32."""
+    extra = extra or {}
+    x = embed_tokens(cfg, params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None],
+                                 tokens.shape)
+    if cfg.frontend == "patches" and "patch_embeds" in extra:
+        x = frontends.splice_prefix(cfg, params["frontend"], x,
+                                    extra["patch_embeds"])
+    enc_out = enc_pos = None
+    if cfg.is_encoder_decoder:
+        enc_out = run_encoder(cfg, params, extra["frames"])
+        enc_pos = jnp.broadcast_to(jnp.arange(enc_out.shape[1])[None],
+                                   enc_out.shape[:2])
+        x = x + _dec_pos_embed(cfg, params, x.shape[1])
+
+    def group_fn(x, gp):
+        out = _group_train(cfg, gp, x, positions, enc_out, enc_pos)
+        return out, None
+
+    if cfg.remat:
+        group_fn = jax.checkpoint(group_fn, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(group_fn, x, params["groups"])
+    else:
+        for g in range(cfg.n_groups):
+            x, _ = group_fn(x, jax.tree.map(lambda a: a[g], params["groups"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(cfg, head, x)
+
+
+def lm_loss(cfg, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Next-token cross-entropy; batch: tokens (B,S), labels (B,S) (-1 = pad)."""
+    logits = forward(cfg, params, batch["tokens"],
+                     {k: v for k, v in batch.items()
+                      if k not in ("tokens", "labels")})
+    labels = batch["labels"]
+    valid = labels >= 0
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - picked, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+# ================================================================ caches
+def _cache_len(cfg, kind: str, max_len: int) -> int:
+    if kind in ("local_attn", "swa") and cfg.window is not None:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_cache(cfg, batch: int, max_len: int) -> Params:
+    """Decode-state pytree; attn caches sized max_len (window-clamped)."""
+    groups: Dict[str, Any] = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        if kind in ("attn", "local_attn", "swa"):
+            ln = _cache_len(cfg, kind, max_len)
+            one = (attn.init_mla_cache(cfg, batch, ln) if cfg.use_mla
+                   else attn.init_kv_cache(cfg, batch, ln))
+        elif kind == "rglru":
+            one = rglru.init_rglru_state(cfg, batch)
+        elif kind == "mlstm":
+            one = xlstm.init_mlstm_state(cfg, batch)
+        else:
+            one = xlstm.init_slstm_state(cfg, batch)
+        groups[f"b{j}_{kind}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_groups,) + a.shape), one)
+    cache: Params = {"groups": groups}
+    if cfg.is_encoder_decoder:
+        kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        shape = (cfg.n_groups, batch, cfg.encoder_ctx, kh, hd)
+        cache["cross"] = {
+            f"b{j}_{kind}": {"k": jnp.zeros(shape, cfg.dtype),
+                             "v": jnp.zeros(shape, cfg.dtype)}
+            for j, kind in enumerate(cfg.block_pattern)
+        }
+    return cache
+
+
+def cache_axes(cfg) -> Any:
+    """Logical axes for the cache pytree (prefixed by the groups dim)."""
+
+    def lift(t):
+        return jax.tree.map(lambda a: ("layers",) + tuple(a), t,
+                            is_leaf=lambda a: isinstance(a, tuple))
+
+    groups = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        if kind in ("attn", "local_attn", "swa"):
+            ax = attn.MLA_CACHE_AXES if cfg.use_mla else attn.KV_CACHE_AXES
+        elif kind == "rglru":
+            ax = rglru.RGLRU_STATE_AXES
+        elif kind == "mlstm":
+            ax = xlstm.MLSTM_STATE_AXES
+        else:
+            ax = {"c": ("batch", "embed"), "n": ("batch", "embed"),
+                  "h": ("batch", "embed"), "m": ("batch", "embed"),
+                  "conv": ("batch", None, "embed")}
+        groups[f"b{j}_{kind}"] = lift(ax)
+    out: Dict[str, Any] = {"groups": groups}
+    if cfg.is_encoder_decoder:
+        out["cross"] = {
+            f"b{j}_{kind}": lift(attn.KV_CACHE_AXES)
+            for j, kind in enumerate(cfg.block_pattern)
+        }
+    return out
+
+
+# ================================================================ prefill
+def _mix_prefill(cfg, kind, bp, x, positions, max_len, cross_kv=None):
+    h = apply_norm(cfg, bp["norm_mix"], x)
+    window = cfg.window if kind in ("local_attn", "swa") else None
+    if kind in ("attn", "local_attn", "swa"):
+        ln = _cache_len(cfg, kind, max_len)
+        if cfg.use_mla:
+            out, c = attn.mla_prefill(cfg, bp["mix"], h, positions, ln)
+        else:
+            out, c = attn.gqa_prefill(cfg, bp["mix"], h, positions, ln,
+                                      window=window)
+    elif kind == "rglru":
+        out, c = rglru.rglru_train(cfg, bp["mix"], h, return_state=True)
+    elif kind == "mlstm":
+        out, c = xlstm.mlstm_train(cfg, bp["mix"], h, return_state=True)
+    else:
+        out, c = xlstm.slstm_train(cfg, bp["mix"], h, return_state=True)
+    x = x + out
+    if cfg.is_encoder_decoder and cross_kv is not None:
+        h = apply_norm(cfg, bp["norm_cross"], x)
+        (k, v), enc_pos = cross_kv
+        x = x + attn.gqa_train(cfg, bp["cross"], h, positions, causal=False,
+                               kv_override=(k, v), kv_positions=enc_pos)
+    if _has_mlp(cfg):
+        h = apply_norm(cfg, bp["norm_mlp"], x)
+        ff = moe.apply_moe(cfg, bp["mlp"], h) if cfg.is_moe \
+            else apply_mlp(cfg, bp["mlp"], h)
+        x = x + ff
+    return x, c
+
+
+def prefill(cfg, params, tokens: jax.Array, max_len: Optional[int] = None,
+            extra: Optional[Dict[str, jax.Array]] = None):
+    """Process the prompt; returns (last-token logits, cache)."""
+    extra = extra or {}
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = embed_tokens(cfg, params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.frontend == "patches" and "patch_embeds" in extra:
+        x = frontends.splice_prefix(cfg, params["frontend"], x,
+                                    extra["patch_embeds"])
+    enc_out = enc_pos = None
+    if cfg.is_encoder_decoder:
+        enc_out = run_encoder(cfg, params, extra["frames"])
+        enc_pos = jnp.broadcast_to(jnp.arange(enc_out.shape[1])[None],
+                                   enc_out.shape[:2])
+        x = x + _dec_pos_embed(cfg, params, s)
+
+    def group_fn(x, gp):
+        caches = {}
+        cross_caches = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            bp = gp[f"b{j}_{kind}"]
+            cross_kv = None
+            if cfg.is_encoder_decoder and enc_out is not None:
+                te = enc_out.shape[1]
+                kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+                ck = matmul(enc_out, bp["cross"]["wk"]).reshape(b, te, kh, hd)
+                cv = matmul(enc_out, bp["cross"]["wv"]).reshape(b, te, kh, hd)
+                cross_kv = ((ck, cv), enc_pos)
+                cross_caches[f"b{j}_{kind}"] = {"k": ck, "v": cv}
+            x, c = _mix_prefill(cfg, kind, bp, x, positions, max_len, cross_kv)
+            caches[f"b{j}_{kind}"] = c
+        return x, (caches, cross_caches)
+
+    if cfg.scan_layers:
+        x, (caches, cross) = jax.lax.scan(group_fn, x, params["groups"])
+    else:
+        accs = []
+        for g in range(cfg.n_groups):
+            x, yc = group_fn(x, jax.tree.map(lambda a: a[g], params["groups"]))
+            accs.append(yc)
+        caches = _stack([a[0] for a in accs])
+        cross = _stack([a[1] for a in accs])
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(cfg, head, x)[:, 0]
+    cache: Params = {"groups": caches}
+    if cfg.is_encoder_decoder:
+        cache["cross"] = cross
+    return logits, cache
+
+
+# ================================================================ decode
+def _mix_decode(cfg, kind, bp, x, cache_one, position, cross_cache=None):
+    h = apply_norm(cfg, bp["norm_mix"], x)
+    window = cfg.window if kind in ("local_attn", "swa") else None
+    if kind in ("attn", "local_attn", "swa"):
+        if cfg.use_mla:
+            out, c = attn.mla_decode(cfg, bp["mix"], h, cache_one, position)
+        else:
+            out, c = attn.gqa_decode(cfg, bp["mix"], h, cache_one, position,
+                                     window=window)
+    elif kind == "rglru":
+        out, c = rglru.rglru_decode(cfg, bp["mix"], h, cache_one)
+    elif kind == "mlstm":
+        out, c = xlstm.mlstm_decode(cfg, bp["mix"], h, cache_one)
+    else:
+        out, c = xlstm.slstm_decode(cfg, bp["mix"], h, cache_one)
+    x = x + out
+    if cfg.is_encoder_decoder and cross_cache is not None:
+        h = apply_norm(cfg, bp["norm_cross"], x)
+        b, te = cross_cache["k"].shape[:2]
+        hq, hd = cfg.n_heads, cfg.resolved_head_dim
+        q = matmul(h, bp["cross"]["wq"]).reshape(b, 1, hq, hd)
+        enc_pos = jnp.broadcast_to(jnp.arange(te)[None], (b, te))
+        o = attn.flash_attention(q, cross_cache["k"], cross_cache["v"],
+                                 jnp.zeros((b, 1), jnp.int32) + te,
+                                 enc_pos, causal=False)
+        x = x + matmul(o.reshape(b, 1, hq * hd), bp["cross"]["wo"])
+    if _has_mlp(cfg):
+        h = apply_norm(cfg, bp["norm_mlp"], x)
+        ff = moe.apply_moe(cfg, bp["mlp"], h) if cfg.is_moe \
+            else apply_mlp(cfg, bp["mlp"], h)
+        x = x + ff
+    return x, c
+
+
+def decode_step(cfg, params, cache: Params, tokens: jax.Array,
+                positions: jax.Array):
+    """One decode step.  tokens (B,) int32; positions (B,) int32.
+
+    Returns (logits (B, V) f32, new cache).
+    """
+    b = tokens.shape[0]
+    x = embed_tokens(cfg, params["embed"], tokens[:, None])
+    if cfg.is_encoder_decoder:
+        x = x + jnp.take(params["dec_pos"]["pos"].astype(cfg.dtype),
+                         jnp.minimum(positions, params["dec_pos"]["pos"].shape[0] - 1),
+                         axis=0)[:, None]
+
+    def group_fn(x, xs):
+        gp, gcache, gcross = xs
+        new = {}
+        for j, kind in enumerate(cfg.block_pattern):
+            nm = f"b{j}_{kind}"
+            cross = gcross[nm] if gcross is not None else None
+            x, c = _mix_decode(cfg, kind, gp[nm], x, gcache[nm], positions,
+                               cross)
+            new[nm] = c
+        return x, new
+
+    xs = (params["groups"], cache["groups"],
+          cache.get("cross") if cfg.is_encoder_decoder else None)
+    if cfg.scan_layers:
+        x, new_groups = jax.lax.scan(group_fn, x, xs)
+    else:
+        outs = []
+        for g in range(cfg.n_groups):
+            x, y = group_fn(x, jax.tree.map(lambda a: a[g], xs))
+            outs.append(y)
+        new_groups = _stack(outs)
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(cfg, head, x)[:, 0]
+    new_cache = dict(cache)
+    new_cache["groups"] = new_groups
+    return logits, new_cache

@@ -1,0 +1,310 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+TPU adaptation
+--------------
+* mLSTM's recurrence C_t = f_t C_{t-1} + i_t k_t v_tᵀ is computed in
+  *chunkwise-parallel* form (the linear-attention chunking trick): a
+  ``lax.scan`` over T/chunk steps carrying the (C, n) state, with the
+  intra-chunk part a dense (chunk × chunk) decay-masked attention — MXU
+  friendly, O(T·chunk) memory instead of O(T·d²) for a naive scan.  Gating
+  is kept in log-space f32 for stability (the paper's m-state stabilizer is
+  subsumed by computing decays as exp of log-sigmoid cumsums within a chunk).
+* sLSTM has genuine recurrent h→gate connections, so it cannot be
+  parallelized over time; it is a ``lax.scan`` with block-diagonal (per-head)
+  recurrent weights, exactly as the paper specifies.  Decode is O(1) for both.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.axes import logical_constraint
+
+from .layers import dense_init, matmul
+
+MLSTM_PROJ = 2  # up-projection factor (paper)
+SLSTM_FF = 4.0 / 3.0  # post-cell gated FFN factor (paper)
+CONV_W = 4
+
+
+def _split_heads(x, nh):
+    b, t, d = x.shape
+    return x.reshape(b, t, nh, d // nh)
+
+
+# ===================================================================== mLSTM
+def init_mlstm(cfg, key):
+    d = cfg.d_model
+    di = MLSTM_PROJ * d
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * di), dtype=cfg.param_dtype),
+        "conv_w": jax.nn.initializers.normal(0.02)(ks[1], (CONV_W, di),
+                                                   cfg.param_dtype),
+        "conv_b": jnp.zeros((di,), cfg.param_dtype),
+        "wq": dense_init(ks[2], (di, di), dtype=cfg.param_dtype),
+        "wk": dense_init(ks[3], (di, di), dtype=cfg.param_dtype),
+        "wv": dense_init(ks[4], (di, di), dtype=cfg.param_dtype),
+        "w_if": dense_init(ks[5], (di, 2 * cfg.n_heads), dtype=cfg.param_dtype),
+        "b_if": jnp.concatenate([jnp.zeros((cfg.n_heads,), cfg.param_dtype),
+                                 jnp.full((cfg.n_heads,), 3.0, cfg.param_dtype)]),
+        "skip_scale": jnp.ones((di,), cfg.param_dtype),
+        "w_down": dense_init(ks[6], (di, d), dtype=cfg.param_dtype),
+    }
+
+
+MLSTM_AXES = {
+    "w_up": ("embed", "mlp"),
+    "conv_w": ("conv", "mlp"),
+    "conv_b": ("mlp",),
+    "wq": ("mlp", "qkv"),
+    "wk": ("mlp", "qkv"),
+    "wv": ("mlp", "qkv"),
+    "w_if": ("mlp", None),
+    "b_if": (None,),
+    "skip_scale": ("mlp",),
+    "w_down": ("mlp", "embed"),
+}
+
+
+def _conv(p, x, state=None):
+    kw = p["conv_w"].shape[0]
+    w = p["conv_w"].astype(x.dtype)
+    if state is not None:
+        full = jnp.concatenate([state, x], axis=1)
+        out = sum(full[:, i:i + x.shape[1]] * w[i] for i in range(kw))
+        return out + p["conv_b"].astype(x.dtype), full[:, -(kw - 1):]
+    pad = jnp.pad(x, ((0, 0), (kw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(kw))
+    return out + p["conv_b"].astype(x.dtype), pad[:, -(kw - 1):]
+
+
+def _mlstm_qkvif(cfg, p, x, conv_state=None):
+    """Shared pre-cell computation.  x: (B, T, d)."""
+    nh = cfg.n_heads
+    up = matmul(x, p["w_up"])
+    xm, z = jnp.split(up, 2, axis=-1)  # mLSTM branch, output gate branch
+    xc, conv_state = _conv(p, xm, conv_state)
+    xc = jax.nn.silu(xc)
+    q = _split_heads(matmul(xc, p["wq"]), nh)
+    k = _split_heads(matmul(xc, p["wk"]), nh) / jnp.sqrt(
+        jnp.asarray(p["wq"].shape[0] // nh, x.dtype))
+    v = _split_heads(matmul(xm, p["wv"]), nh)
+    gif = matmul(xc, p["w_if"], dtype=jnp.float32) + p["b_if"].astype(jnp.float32)
+    log_i = gif[..., :nh]  # exponential input gate: i = exp(raw)
+    log_f = jax.nn.log_sigmoid(gif[..., nh:])  # sigmoid forget gate
+    return q, k, v, log_i, log_f, xc, z, conv_state
+
+
+def mlstm_train(cfg, p, x: jax.Array, chunk: int = 128,
+                return_state: bool = False):
+    """Chunkwise-parallel mLSTM with cross-chunk log-space (m) stabilization.
+
+    The carried state is *stabilized*: C_true = C·exp(m), n_true = n·exp(m),
+    so all exp() arguments are max-shifted — the scan is exactly equivalent to
+    the paper's per-step recurrence (eqs. 19-27) in exact arithmetic.
+    """
+    b, t, d = x.shape
+    nh = cfg.n_heads
+    q, k, v, log_i, log_f, xc, z, conv_tail = _mlstm_qkvif(cfg, p, x)
+    hd = q.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    qc = q.reshape(b, nc, chunk, nh, hd)
+    kc = k.reshape(b, nc, chunk, nh, hd)
+    vc = v.reshape(b, nc, chunk, nh, hd)
+    lic = log_i.reshape(b, nc, chunk, nh)
+    lfc = log_f.reshape(b, nc, chunk, nh)
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+
+    def step(carry, args):
+        C, n, m_in = carry  # (B,nh,hd,hd), (B,nh,hd), (B,nh)
+        qi, ki, vi, li, lf = args  # (B, L, ...)
+        qi, ki, vi = (a.astype(jnp.float32) for a in (qi, ki, vi))
+        lf_cum = jnp.cumsum(lf, axis=1)  # (B, L, nh)
+        lf_total = lf_cum[:, -1]  # (B, nh)
+        # true intra log-weights: lf_cum[t] - lf_cum[s] + li[s]  (s <= t)
+        ldiff = (lf_cum[:, :, None, :] - lf_cum[:, None, :, :]
+                 + li[:, None, :, :])  # (B, L, L, nh)
+        l_inter = lf_cum + m_in[:, None, :]  # true log-weight on C_true
+        m_t = jnp.maximum(
+            jnp.max(jnp.where(tril, ldiff, -jnp.inf), axis=2), l_inter)
+        D = jnp.where(tril, jnp.exp(ldiff - m_t[:, :, None, :]), 0.0)
+        inter_w = jnp.exp(l_inter - m_t)  # (B, L, nh)
+        s_intra = jnp.einsum("blhd,bmhd->blmh", qi, ki) * D
+        h_num = (jnp.einsum("blmh,bmhe->blhe", s_intra, vi)
+                 + jnp.einsum("blhd,bhde->blhe", qi, C) * inter_w[..., None])
+        den = (jnp.sum(s_intra, axis=2)
+               + jnp.einsum("blhd,bhd->blh", qi, n) * inter_w)
+        # max(|den_true|, 1) == exp(m_t)·max(|den|, exp(-m_t))
+        h = h_num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # carry state to chunk end (stabilized by m_out)
+        m_out = jnp.maximum(lf_total + m_in,
+                            jnp.max(lf_total[:, None] - lf_cum + li, axis=1))
+        dec_k = jnp.exp(lf_total[:, None] - lf_cum + li - m_out[:, None])
+        C_new = (jnp.exp(lf_total + m_in - m_out)[..., None, None] * C
+                 + jnp.einsum("blhd,blhe->bhde", ki * dec_k[..., None], vi))
+        n_new = (jnp.exp(lf_total + m_in - m_out)[..., None] * n
+                 + jnp.sum(ki * dec_k[..., None], axis=1))
+        return (C_new, n_new, m_out), h.astype(x.dtype)
+
+    C0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, nh, hd), jnp.float32)
+    m0 = jnp.zeros((b, nh), jnp.float32)
+    xs = tuple(a.swapaxes(0, 1) for a in (qc, kc, vc, lic, lfc))
+    (Cf, nf, mf), hs = jax.lax.scan(step, (C0, n0, m0), xs)  # (nc, B, L, nh, hd)
+    h = hs.swapaxes(0, 1).reshape(b, t, nh * hd)
+    h = h + p["skip_scale"].astype(x.dtype) * xc  # learnable skip (paper Fig. 10)
+    out = matmul(h * jax.nn.silu(z), p["w_down"])
+    out = logical_constraint(out, ("batch", "seq", "embed"))
+    if return_state:
+        return out, {"C": Cf, "n": nf, "m": mf, "conv": conv_tail}
+    return out
+
+
+def init_mlstm_state(cfg, batch: int, dtype=jnp.float32):
+    nh = cfg.n_heads
+    hd = MLSTM_PROJ * cfg.d_model // nh
+    di = MLSTM_PROJ * cfg.d_model
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.zeros((batch, nh), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, di), cfg.dtype),
+    }
+
+
+MLSTM_STATE_AXES = {
+    "C": ("batch", "heads", None, None),
+    "n": ("batch", "heads", None),
+    "m": ("batch", "heads"),
+    "conv": ("batch", None, "mlp"),
+}
+
+
+def mlstm_decode(cfg, p, x: jax.Array, state) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, d); O(1) stabilized recurrent update (paper eqs. 19-27)."""
+    q, k, v, log_i, log_f, xc, z, conv_state = _mlstm_qkvif(
+        cfg, p, x, state["conv"])
+    q = q[:, 0].astype(jnp.float32)
+    k = k[:, 0].astype(jnp.float32)
+    v = v[:, 0].astype(jnp.float32)
+    li, lf = log_i[:, 0], log_f[:, 0]  # (B, nh)
+    m_new = jnp.maximum(lf + state["m"], li)
+    i = jnp.exp(li - m_new)
+    f = jnp.exp(lf + state["m"] - m_new)
+    C = f[..., None, None] * state["C"] + i[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v)
+    n = f[..., None] * state["n"] + i[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(x.shape[0], 1, -1).astype(x.dtype)
+    h = h + p["skip_scale"].astype(x.dtype) * xc
+    out = matmul(h * jax.nn.silu(z), p["w_down"])
+    return out, {"C": C, "n": n, "m": m_new, "conv": conv_state}
+
+
+# ===================================================================== sLSTM
+def init_slstm(cfg, key):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 4)
+    f_ff = int(SLSTM_FF * d)
+    return {
+        "conv_w": jax.nn.initializers.normal(0.02)(ks[0], (CONV_W, d),
+                                                   cfg.param_dtype),
+        "conv_b": jnp.zeros((d,), cfg.param_dtype),
+        # input weights for i, f, z, o gates
+        "w_gates": dense_init(ks[1], (d, 4 * d), dtype=cfg.param_dtype),
+        # block-diagonal recurrent weights per head: (nh, hd, 4*hd)
+        "r_gates": jax.nn.initializers.orthogonal()(
+            ks[2], (nh, hd, 4 * hd), cfg.param_dtype),
+        "b_gates": jnp.zeros((4 * d,), cfg.param_dtype),
+        "ff_up": dense_init(ks[3], (d, 2 * f_ff), dtype=cfg.param_dtype),
+        "ff_down": dense_init(jax.random.fold_in(key, 9), (f_ff, d),
+                              dtype=cfg.param_dtype),
+    }
+
+
+SLSTM_AXES = {
+    "conv_w": ("conv", "embed"),
+    "conv_b": ("embed",),
+    "w_gates": ("embed", None),
+    "r_gates": ("heads", "head_dim", None),
+    "b_gates": (None,),
+    "ff_up": ("embed", "mlp"),
+    "ff_down": ("mlp", "embed"),
+}
+
+
+def _slstm_cell(cfg, p, gx, state):
+    """One recurrence step.  gx: (B, 4d) input-gate preactivations."""
+    nh = cfg.n_heads
+    b = gx.shape[0]
+    hd = cfg.d_model // nh
+    c, n, h, m = state  # each (B, d) f32 except m (B, d)
+    hh = h.reshape(b, nh, hd)
+    gr = jnp.einsum("bhd,hde->bhe", hh, p["r_gates"].astype(jnp.float32))
+    g = gx + gr.reshape(b, 4 * cfg.d_model) + p["b_gates"].astype(jnp.float32)
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    # stabilized exponential gating (paper eq. 15-17)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_train(cfg, p, x: jax.Array, return_state: bool = False):
+    """x: (B, T, d); sequential lax.scan (true recurrence, paper §2.2)."""
+    b, t, d = x.shape
+    xc, conv_tail = _conv(p, x)
+    xc = jax.nn.silu(xc)
+    gx = matmul(xc, p["w_gates"], dtype=jnp.float32)  # (B, T, 4d)
+    zeros = jnp.zeros((b, d), jnp.float32)
+    init = (zeros, zeros, zeros, jnp.full((b, d), -1e30, jnp.float32))
+    (cf, nf, hf, mf), hs = jax.lax.scan(
+        lambda st, g: _slstm_cell(cfg, p, g, st), init, gx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)  # (B, T, d)
+    up = matmul(h, p["ff_up"])
+    u, g = jnp.split(up, 2, axis=-1)
+    out = matmul(u * jax.nn.gelu(g, approximate=True), p["ff_down"])
+    out = logical_constraint(out, ("batch", "seq", "embed"))
+    if return_state:
+        return out, {"c": cf, "n": nf, "h": hf, "m": mf, "conv": conv_tail}
+    return out
+
+
+def init_slstm_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, d), cfg.dtype),
+    }
+
+
+def slstm_decode(cfg, p, x: jax.Array, state) -> Tuple[jax.Array, dict]:
+    xc, conv_state = _conv(p, x, state["conv"])
+    xc = jax.nn.silu(xc)
+    gx = matmul(xc, p["w_gates"], dtype=jnp.float32)[:, 0]
+    st = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), hv = _slstm_cell(cfg, p, gx, st)
+    hb = hv[:, None].astype(x.dtype)
+    up = matmul(hb, p["ff_up"])
+    u, g = jnp.split(up, 2, axis=-1)
+    out = matmul(u * jax.nn.gelu(g, approximate=True), p["ff_down"])
+    return out, {"c": c, "n": n, "h": h, "m": m, "conv": conv_state}

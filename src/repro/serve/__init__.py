@@ -1,0 +1,6 @@
+"""Serving runtime: continuous batching over the WFE-reclaimed block pool."""
+
+from .engine import ServeEngine
+from .paged_model import paged_decode_step, paged_prefill_into_pool
+
+__all__ = ["ServeEngine", "paged_decode_step", "paged_prefill_into_pool"]

@@ -1,0 +1,79 @@
+"""Serving engine: continuous batching + WFE block pool + paged decode.
+
+The full adaptation loop (DESIGN.md §2.1(A)):
+
+  submit() -> scheduler queue -> tick(): admit / allocate blocks (WFE
+  alloc_block) / protect_step (WFE get_protected, one era reservation per
+  in-flight step) -> device decode step gathers K/V through the protected
+  block tables -> complete(): append tokens, retire finished requests'
+  blocks (WFE retire), release the step reservation, cleanup() reclaims.
+
+Greedy sampling; the device step runs synchronously on CPU here, with an
+optional ``inflight_depth`` that keeps several protected steps outstanding
+to exercise the multi-reservation path the way an async TPU runtime would.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.blocks import BlockPool, Scheduler
+from repro.models.common import ArchConfig
+
+from .paged_model import init_pools, paged_decode_step
+
+__all__ = ["ServeEngine"]
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, n_blocks: int = 64,
+                 block_size: int = 8, max_batch: int = 8,
+                 scheme: str = "WFE", use_kernel: bool = False,
+                 max_threads: int = 8, **smr_kwargs):
+        self.cfg = cfg
+        self.params = params
+        self.block_size = block_size
+        self.use_kernel = use_kernel
+        self.pool = BlockPool(n_blocks, scheme=scheme,
+                              max_threads=max_threads, **smr_kwargs)
+        self.sched = Scheduler(self.pool, block_size=block_size,
+                               max_batch=max_batch)
+        self.pools = init_pools(cfg, n_blocks, block_size)
+        self._step = jax.jit(
+            lambda params, pools, tables, lengths, tokens, positions:
+            paged_decode_step(cfg, params, pools, tables, lengths, tokens,
+                              positions, use_kernel=use_kernel))
+
+    def submit(self, prompt: List[int], max_new_tokens: int):
+        return self.sched.submit(prompt, max_new_tokens)
+
+    def step(self, tid: int) -> bool:
+        """One scheduler tick + device step.  Returns False when idle."""
+        plan = self.sched.tick(tid)
+        if plan is None:
+            return False
+        logits, self.pools = self._step(
+            self.params, self.pools,
+            jnp.asarray(plan.tables), jnp.asarray(plan.lengths),
+            jnp.asarray(plan.tokens), jnp.asarray(plan.positions))
+        sampled = np.asarray(jnp.argmax(logits, axis=-1))
+        self.sched.complete(plan, sampled, tid)
+        return True
+
+    def run(self, tid: int, max_steps: int = 10_000) -> Dict[str, int]:
+        steps = 0
+        while steps < max_steps:
+            if not self.step(tid):
+                with self.sched._qlock:
+                    empty = not self.sched.queue
+                if empty and not self.sched.active:
+                    break
+            steps += 1
+        # final drain of this thread's retire list
+        for _ in range(64):
+            self.pool.cleanup(tid)
+        return dict(self.sched.stats)

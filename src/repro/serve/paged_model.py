@@ -1,0 +1,240 @@
+"""Decode/prefill steps that read and write the PAGED KV pool.
+
+This is the device side of the WFE adaptation: the host scheduler names
+blocks via tables; the device step gathers K/V through those tables
+(kernels/paged_attention on TPU, jnp ref on CPU) and scatters the new
+token's K/V into the block the table's tail names.
+
+Supported stacks: dense GQA attention archs ("attn"/"swa"/"local_attn"
+without MLA).  Recurrent archs keep O(1) state and need no paging; MLA
+would page 576-wide latents with the same mechanics (documented extension).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import paged_decode_attention
+from repro.models import transformer
+from repro.models.attention import _qkv
+from repro.models.layers import (apply_mlp, apply_norm, embed_tokens, matmul,
+                                 unembed)
+from repro.models import moe as moe_mod
+
+Params = Dict[str, Any]
+
+
+def init_pools(cfg, n_blocks: int, block_size: int):
+    """One K and one V pool per stacked group-layer: (G, N, bs, KH, D)."""
+    kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.n_groups * len(cfg.block_pattern), n_blocks, block_size,
+             kh, hd)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+POOL_AXES = {"k": (None, None, None, "kv_heads", "head_dim"),
+             "v": (None, None, None, "kv_heads", "head_dim")}
+
+
+def _check_paged_support(cfg):
+    # full-attention GQA only: windowed archs would need window masking in
+    # the paged gather (straightforward; not needed by the examples), and
+    # MLA would page 576-wide latents instead of K/V
+    assert not cfg.use_mla and not cfg.is_encoder_decoder, cfg.name
+    assert all(k == "attn" for k in cfg.block_pattern), cfg.block_pattern
+
+
+def paged_decode_step(cfg, params, pools, tables, lengths, tokens, positions,
+                      *, use_kernel: bool = False):
+    """One token for a batch of requests against the paged pool.
+
+    tables (B, nblk) i32; lengths (B,) i32 (INCLUDING the new token);
+    tokens (B,) i32; positions (B,) i32 (= lengths - 1).
+    Returns (logits (B, V) f32, updated pools).
+    """
+    _check_paged_support(cfg)
+    b = tokens.shape[0]
+    bs = pools["k"].shape[2]
+    kh, hd, h = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_heads
+    g = h // kh
+    x = embed_tokens(cfg, params["embed"], tokens[:, None])
+    # the pool block and in-block offset receiving this token's K/V
+    blk_of_tok = tables[jnp.arange(b), positions // bs]  # (B,)
+    off = positions % bs
+
+    def layer_fn(x, xs):
+        bp, k_pool, v_pool = xs  # (N, bs, KH, D) pools for this layer
+        hn = apply_norm(cfg, bp["norm_mix"], x)
+        q, k1, v1 = _qkv(cfg, bp["mix"], hn, positions[:, None])
+        # scatter the new K/V into the paged pool
+        k_pool = k_pool.at[blk_of_tok, off].set(k1[:, 0])
+        v_pool = v_pool.at[blk_of_tok, off].set(v1[:, 0])
+        qg = q.reshape(b, 1, kh, g, hd)[:, 0].transpose(0, 1, 2, 3)  # (B,KH,G,D)
+        out = paged_decode_attention(qg, k_pool, v_pool, tables, lengths,
+                                     scale=1.0 / math.sqrt(hd),
+                                     use_kernel=use_kernel)
+        out = out.reshape(b, 1, h * hd).astype(x.dtype)
+        x = x + matmul(out, bp["mix"]["wo"])
+        if transformer._has_mlp(cfg):
+            hn = apply_norm(cfg, bp["norm_mlp"], x)
+            ff = moe_mod.apply_moe(cfg, bp["mlp"], hn) if cfg.is_moe \
+                else apply_mlp(cfg, bp["mlp"], hn)
+            x = x + ff
+        return x, (k_pool, v_pool)
+
+    # flatten the group structure: layer l = (group g, pattern j)
+    n_pat = len(cfg.block_pattern)
+
+    def layer_param(l):
+        g_i, j = divmod(l, n_pat)
+        kind = cfg.block_pattern[j]
+        return jax.tree.map(lambda a: a[g_i],
+                            params["groups"][f"b{j}_{kind}"])
+
+    n_layers = cfg.n_groups * n_pat
+    new_k, new_v = [], []
+    for l in range(n_layers):
+        x, (kp, vp) = layer_fn(x, (layer_param(l), pools["k"][l],
+                                   pools["v"][l]))
+        new_k.append(kp)
+        new_v.append(vp)
+    pools = {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(cfg, head, x)[:, 0]
+    return logits, pools
+
+
+def paged_prefill_into_pool(cfg, params, pools, tables, tokens,
+                            *, use_kernel: bool = False):
+    """Prompt processing that scatters K/V into the paged pool.
+
+    tokens (B, S) with S a multiple of the block size; tables (B, S//bs).
+    Returns (last-token logits (B, V), updated pools).
+    """
+    _check_paged_support(cfg)
+    b, s = tokens.shape
+    bs = pools["k"].shape[2]
+    assert s % bs == 0, (s, bs)
+    nblk = s // bs
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embed_tokens(cfg, params["embed"], tokens)
+
+    from repro.models.attention import flash_attention
+
+    n_pat = len(cfg.block_pattern)
+    n_layers = cfg.n_groups * n_pat
+    new_k, new_v = [], []
+    for l in range(n_layers):
+        g_i, j = divmod(l, n_pat)
+        kind = cfg.block_pattern[j]
+        bp = jax.tree.map(lambda a: a[g_i], params["groups"][f"b{j}_{kind}"])
+        hn = apply_norm(cfg, bp["norm_mix"], x)
+        q, k, v = _qkv(cfg, bp["mix"], hn, positions)
+        out = flash_attention(q, k, v, positions, positions, causal=True)
+        out = out.reshape(b, s, cfg.n_heads * cfg.resolved_head_dim)
+        x = x + matmul(out, bp["mix"]["wo"])
+        if transformer._has_mlp(cfg):
+            hn = apply_norm(cfg, bp["norm_mlp"], x)
+            ff = moe_mod.apply_moe(cfg, bp["mlp"], hn) if cfg.is_moe \
+                else apply_mlp(cfg, bp["mlp"], hn)
+            x = x + ff
+        kp = pools["k"][l].at[tables].set(
+            k.reshape(b, nblk, bs, *k.shape[2:]))
+        vp = pools["v"][l].at[tables].set(
+            v.reshape(b, nblk, bs, *v.shape[2:]))
+        new_k.append(kp)
+        new_v.append(vp)
+    pools = {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(cfg, head, x)[:, 0]
+    return logits, pools
+
+
+# ===================================================================== MLA
+def init_mla_pools(cfg, n_blocks: int, block_size: int):
+    """Paged MLA latent pool: pages store (c_kv ‖ k_rope) rows — 576 B/token
+    for deepseek-v2 instead of 2·KH·D; the same WFE block lifecycle applies.
+    """
+    width = cfg.kv_lora_rank + cfg.rope_head_dim
+    shape = (cfg.n_groups * len(cfg.block_pattern), n_blocks, block_size,
+             width)
+    return {"lat": jnp.zeros(shape, cfg.dtype)}
+
+
+def paged_mla_decode_step(cfg, params, pools, tables, lengths, tokens,
+                          positions):
+    """One decode token through the paged LATENT pool (absorbed-form MLA).
+
+    Mirrors paged_decode_step for cfg.use_mla archs: the new token's latent
+    row scatters into the table's tail block; attention runs in the latent
+    space against the gathered pages (jnp ref; the Pallas paged kernel
+    generalizes by treating the latent width as head_dim with KH=1).
+    """
+    import math as _math
+
+    from repro.models.attention import _mla_qkv
+    from repro.models.layers import apply_norm as _norm
+
+    assert cfg.use_mla
+    b = tokens.shape[0]
+    bs = pools["lat"].shape[2]
+    h = cfg.n_heads
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    dn, dvh = cfg.nope_head_dim, cfg.v_head_dim
+    x = embed_tokens(cfg, params["embed"], tokens[:, None])
+    blk_of_tok = tables[jnp.arange(b), positions // bs]
+    off = positions % bs
+    n_pat = len(cfg.block_pattern)
+
+    def layer_param(l):
+        g_i, j = divmod(l, n_pat)
+        kind = cfg.block_pattern[j]
+        return jax.tree.map(lambda a: a[g_i],
+                            params["groups"][f"b{j}_{kind}"])
+
+    n_layers = cfg.n_groups * n_pat
+    new_lat = []
+    nblk = tables.shape[1]
+    for l in range(n_layers):
+        bp = layer_param(l)
+        hn = apply_norm(cfg, bp["norm_mix"], x)
+        q_nope, q_rope, c_kv1, k_rope1 = _mla_qkv(
+            cfg, bp["mix"], hn, positions[:, None])
+        row = jnp.concatenate([c_kv1[:, 0], k_rope1[:, 0, 0]], -1)  # (B, r+dr)
+        lat = pools["lat"][l].at[blk_of_tok, off].set(row)
+        pages = lat[tables].reshape(b, nblk * bs, r + dr)  # (B, S, r+dr)
+        c_kv, k_rope = pages[..., :r], pages[..., r:]
+        wk_b = bp["mix"]["wk_b"].astype(x.dtype).reshape(r, h, dn)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk_b,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope,
+                          preferred_element_type=jnp.float32)
+             ) / _math.sqrt(dn + dr)
+        valid = jnp.arange(nblk * bs)[None, :] < lengths[:, None]
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhqs,bsr->bqhr", w.astype(c_kv.dtype), c_kv,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        wv_b = bp["mix"]["wv_b"].astype(x.dtype).reshape(r, h, dvh)
+        o = jnp.einsum("bqhr,rhd->bqhd", o_lat, wv_b,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        x = x + matmul(o.reshape(b, 1, h * dvh), bp["mix"]["wo"])
+        if transformer._has_mlp(cfg):
+            hn = apply_norm(cfg, bp["norm_mlp"], x)
+            ff = moe_mod.apply_moe(cfg, bp["mlp"], hn) if cfg.is_moe \
+                else apply_mlp(cfg, bp["mlp"], hn)
+            x = x + ff
+        new_lat.append(lat)
+    pools = {"lat": jnp.stack(new_lat)}
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(cfg, head, x)[:, 0]
+    return logits, pools

@@ -1,0 +1,21 @@
+"""Distribution substrate: logical-axis sharding, compression, overlap."""
+
+from .axes import (
+    DEFAULT_RULES,
+    axis_rules,
+    current_mesh,
+    logical_constraint,
+    logical_to_spec,
+    sharding_tree,
+    spec_tree_for_params,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "axis_rules",
+    "current_mesh",
+    "logical_constraint",
+    "logical_to_spec",
+    "sharding_tree",
+    "spec_tree_for_params",
+]

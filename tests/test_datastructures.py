@@ -1,0 +1,127 @@
+"""Sequential + randomized correctness of the paper's benchmark data
+structures against a Python-dict/list model, under every SMR scheme.
+
+These are the structures the paper evaluates (§5); model-based testing
+catches structural bugs the throughput benchmarks would hide.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_scheme
+from repro.core.datastructures import (CRTurnQueue, HarrisMichaelList,
+                                       KPQueue, MichaelHashMap, NatarajanBST,
+                                       TreiberStack)
+
+KV_STRUCTS = {
+    "list": HarrisMichaelList,
+    "hashmap": MichaelHashMap,
+    "bst": NatarajanBST,
+}
+QUEUES = {"kp": KPQueue, "crturn": CRTurnQueue}
+SCHEMES = ("WFE", "HE", "HP", "EBR", "2GEIBR")
+
+
+def _smr(scheme, n=2):
+    kw = ({"era_freq": 1, "cleanup_freq": 1} if scheme in ("WFE", "HE")
+          else {"epoch_freq": 1, "cleanup_freq": 1}
+          if scheme in ("EBR", "2GEIBR") else {"cleanup_freq": 1})
+    return make_scheme(scheme, max_threads=n, **kw)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("name", sorted(KV_STRUCTS))
+def test_kv_structure_sequential_model(name, scheme):
+    smr = _smr(scheme)
+    ds = KV_STRUCTS[name](smr)
+    tid = smr.register_thread()
+    model = {}
+    import random
+
+    r = random.Random(42)
+    for i in range(400):
+        key = r.randrange(40)
+        op = r.random()
+        if op < 0.4:
+            want = key not in model
+            got = ds.insert(key, f"v{i}", tid)
+            assert got == want, (name, scheme, "insert", key)
+            if want:
+                model[key] = f"v{i}"
+        elif op < 0.7:
+            want = key in model
+            got = ds.delete(key, tid)
+            assert got == want, (name, scheme, "delete", key)
+            model.pop(key, None)
+        else:
+            got = ds.get(key, tid)
+            want = model.get(key)
+            assert got == want, (name, scheme, "get", key)
+    # final sweep: every model key present, every other key absent
+    for key in range(40):
+        assert ds.get(key, tid) == model.get(key), (name, scheme, key)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("name", sorted(QUEUES))
+def test_queue_fifo_model(name, scheme):
+    smr = _smr(scheme)
+    q = QUEUES[name](smr)
+    tid = smr.register_thread()
+    import collections
+    import random
+
+    model = collections.deque()
+    r = random.Random(7)
+    for i in range(400):
+        if r.random() < 0.55:
+            q.enqueue(i, tid)
+            model.append(i)
+        else:
+            got = q.dequeue(tid)
+            want = model.popleft() if model else None
+            assert got == want, (name, scheme, i)
+    while model:
+        assert q.dequeue(tid) == model.popleft(), (name, scheme)
+    assert q.dequeue(tid) is None
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_stack_lifo_model(scheme):
+    smr = _smr(scheme)
+    s = TreiberStack(smr)
+    tid = smr.register_thread()
+    model = []
+    import random
+
+    r = random.Random(3)
+    for i in range(300):
+        if r.random() < 0.55:
+            s.push(i, tid)
+            model.append(i)
+        else:
+            got = s.pop(tid)
+            want = model.pop() if model else None
+            assert got == want, (scheme, i)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["i", "d", "g"]),
+                              st.integers(0, 15)), max_size=80))
+@pytest.mark.parametrize("name", sorted(KV_STRUCTS))
+def test_kv_structure_property_model(name, ops):
+    """Hypothesis-driven op sequences against the dict model (WFE)."""
+    smr = _smr("WFE")
+    ds = KV_STRUCTS[name](smr)
+    tid = smr.register_thread()
+    model = {}
+    for op, key in ops:
+        if op == "i":
+            assert ds.insert(key, key * 2, tid) == (key not in model)
+            model.setdefault(key, key * 2)
+        elif op == "d":
+            assert ds.delete(key, tid) == (key in model)
+            model.pop(key, None)
+        else:
+            assert ds.get(key, tid) == model.get(key)
+    assert smr.stats()["unreclaimed"] < 100  # reclamation kept up

@@ -1,0 +1,195 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracle, shape sweeps.
+
+Also property tests (hypothesis) for era_scan against the scalar WFE
+can_delete logic — the kernel must agree with the paper's scan exactly.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.era_scan import INF_ERA32, era_scan
+from repro.kernels.paged_attention import paged_attention
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ================================================================ era_scan
+def _scalar_can_delete(alloc, retire, reservations):
+    """Paper Fig. 1/4 can_delete, literal scalar transcription."""
+    out = []
+    for a, r in zip(alloc, retire):
+        ok = True
+        for row in reservations:
+            for era in row:
+                if era != INF_ERA32 and a <= era <= r:
+                    ok = False
+        out.append(ok)
+    return np.array(out)
+
+
+@pytest.mark.parametrize("r", [1, 7, 256, 300, 1000])
+@pytest.mark.parametrize("t,h", [(4, 2), (64, 10), (512, 10)])
+def test_era_scan_matches_ref_shapes(r, t, h):
+    key = jax.random.key(r * 1000 + t + h)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    alloc = jax.random.randint(k1, (r,), 0, 100, jnp.int32)
+    retire = alloc + jax.random.randint(k2, (r,), 0, 50, jnp.int32)
+    res = jax.random.randint(k3, (t, h), 0, 160, jnp.int32)
+    empty = jax.random.bernoulli(k4, 0.5, (t, h))
+    res = jnp.where(empty, INF_ERA32, res)
+
+    got = era_scan(alloc, retire, res, interpret=True)
+    want = ref.era_scan_ref(alloc, retire, res)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.data())
+def test_era_scan_property_vs_scalar(data):
+    r = data.draw(st.integers(1, 40))
+    t = data.draw(st.integers(1, 8))
+    h = data.draw(st.integers(1, 6))
+    alloc = np.array(data.draw(st.lists(
+        st.integers(0, 30), min_size=r, max_size=r)), np.int32)
+    retire = alloc + np.array(data.draw(st.lists(
+        st.integers(0, 10), min_size=r, max_size=r)), np.int32)
+    res = np.array(data.draw(st.lists(
+        st.lists(st.one_of(st.integers(0, 40), st.just(INF_ERA32)),
+                 min_size=h, max_size=h),
+        min_size=t, max_size=t)), np.int32)
+    got = np.asarray(era_scan(jnp.asarray(alloc), jnp.asarray(retire),
+                              jnp.asarray(res), interpret=True))
+    want = _scalar_can_delete(alloc, retire, res)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_era_scan_never_frees_protected():
+    """Safety invariant: any reservation inside [alloc, retire] blocks it."""
+    alloc = jnp.array([5, 5, 5], jnp.int32)
+    retire = jnp.array([10, 10, 10], jnp.int32)
+    res = jnp.array([[7, INF_ERA32]], jnp.int32)  # era 7 within all intervals
+    out = era_scan(alloc, retire, res, interpret=True)
+    assert not bool(out.any())
+    # boundary eras count as protected (paper: alloc <= era <= retire)
+    for era in (5, 10):
+        res = jnp.array([[era]], jnp.int32)
+        assert not bool(era_scan(alloc, retire, res, interpret=True).any())
+    # outside the interval -> reclaimable
+    for era in (4, 11):
+        res = jnp.array([[era]], jnp.int32)
+        assert bool(era_scan(alloc, retire, res, interpret=True).all())
+
+
+# ========================================================== paged_attention
+def _contiguous_oracle(q, k, v, lengths, scale):
+    """Dense decode attention on the gathered cache (independent oracle)."""
+    b, kh, g, d = q.shape
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(k.shape[1])[None, :]
+    s = jnp.where((pos < lengths[:, None])[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,kh,g,d,bs,nblk", [
+    (2, 1, 4, 64, 16, 4),
+    (3, 2, 2, 128, 16, 3),
+    (1, 4, 1, 128, 32, 2),
+    (4, 2, 8, 64, 8, 8),
+])
+def test_paged_attention_matches_ref(b, kh, g, d, bs, nblk, dtype):
+    key = jax.random.key(b * 100 + d)
+    ks = jax.random.split(key, 5)
+    n = b * nblk + 3  # pool larger than needed
+    q = jax.random.normal(ks[0], (b, kh, g, d), dtype)
+    k_pool = jax.random.normal(ks[1], (n, bs, kh, d), dtype)
+    v_pool = jax.random.normal(ks[2], (n, bs, kh, d), dtype)
+    # distinct random tables; padding entries use block 0 (masked anyway)
+    perm = jax.random.permutation(ks[3], n)[: b * nblk].reshape(b, nblk)
+    tables = perm.astype(jnp.int32)
+    lengths = jax.random.randint(ks[4], (b,), 1, nblk * bs + 1, jnp.int32)
+
+    got = paged_attention(q, k_pool, v_pool, tables, lengths, interpret=True)
+    want = ref.paged_attention_ref(q, k_pool, v_pool, tables, lengths)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+    # the jnp ref itself must match a dense gather oracle
+    k = k_pool[tables].reshape(b, nblk * bs, kh, d)
+    v = v_pool[tables].reshape(b, nblk * bs, kh, d)
+    dense = _contiguous_oracle(q, k, v, lengths, 1.0 / math.sqrt(d))
+    np.testing.assert_allclose(
+        np.asarray(want, np.float32), np.asarray(dense, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_paged_attention_table_permutation_invariance():
+    """Attention output must not depend on *which* pool slots blocks occupy."""
+    b, kh, g, d, bs, nblk = 2, 2, 2, 64, 8, 4
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 4)
+    n = 16
+    q = jax.random.normal(ks[0], (b, kh, g, d), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (n, bs, kh, d), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (n, bs, kh, d), jnp.float32)
+    tables = jnp.arange(b * nblk, dtype=jnp.int32).reshape(b, nblk)
+    lengths = jnp.full((b,), nblk * bs, jnp.int32)
+    out1 = paged_attention(q, k_pool, v_pool, tables, lengths, interpret=True)
+
+    # move every block to a different pool slot, rewrite tables accordingly
+    perm = jax.random.permutation(ks[3], n)
+    inv = jnp.argsort(perm)
+    k2, v2 = k_pool[inv], v_pool[inv]
+    tables2 = perm[tables].astype(jnp.int32)
+    out2 = paged_attention(q, k2, v2, tables2, lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ========================================================== flash_attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,t,h,kh,d,cq,ck", [
+    (2, 256, 4, 4, 64, 128, 128),   # MHA
+    (1, 256, 4, 2, 64, 64, 128),    # GQA g=2
+    (2, 128, 8, 1, 128, 128, 64),   # MQA
+])
+def test_flash_attention_kernel_matches_ref(b, t, h, kh, d, cq, ck, dtype):
+    from repro.kernels.flash_attention import (flash_attention_ref,
+                                               flash_attention_tpu)
+
+    ks = jax.random.split(jax.random.key(t + h), 3)
+    q = jax.random.normal(ks[0], (b, t, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, t, kh, d), dtype)
+    v = jax.random.normal(ks[2], (b, t, kh, d), dtype)
+    got = flash_attention_tpu(q, k, v, causal=True, cq=cq, ck=ck,
+                              interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_kernel_noncausal():
+    from repro.kernels.flash_attention import (flash_attention_ref,
+                                               flash_attention_tpu)
+
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(ks[0], (2, 128, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 128, 2, 64), jnp.float32)
+    got = flash_attention_tpu(q, k, v, causal=False, cq=64, ck=64,
+                              interpret=True)
+    want = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,161 @@
+"""Hypothesis property tests for the SMR system invariants.
+
+Rather than relying only on thread timing, these drive the schemes through
+RANDOMIZED DETERMINISTIC SCHEDULES: hypothesis generates an interleaved op
+sequence over several logical threads (alloc / publish / protect / retire /
+clear / flush), executed single-threaded.  Because every shim operation is
+a single linearization point, any such schedule is a legal concurrent
+history — so the invariants must hold on all of them:
+
+  I1 (safety)     a block is never freed while any thread's reservation
+                  protects it (protection = get_protected since last clear,
+                  with the block's retire not yet preceding the publish);
+  I2 (liveness)   after all reservations clear and enough flushes, every
+                  retired block is freed (bounded memory, Thm. 4 / §5);
+  I3 (no-leak)    frees never exceed retires; no double free (the shim
+                  asserts); freed implies retired first.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SCHEMES, make_scheme
+from repro.core.atomics import AtomicRef, PtrView
+from repro.core.smr_base import Block
+
+N_THREADS = 3
+N_CELLS = 2
+
+
+class _Node(Block):
+    __slots__ = ("v",)
+
+    def __init__(self, v=0):
+        super().__init__()
+        self.v = v
+
+    def _poison_payload(self):
+        self.v = None
+
+
+OPS = st.sampled_from(["alloc_publish", "protect", "retire_current",
+                       "clear", "flush"])
+
+
+def _schedule():
+    return st.lists(st.tuples(st.integers(0, N_THREADS - 1), OPS,
+                              st.integers(0, N_CELLS - 1)),
+                    min_size=1, max_size=60)
+
+
+@pytest.mark.parametrize("scheme", ["WFE", "HE", "HP", "2GEIBR"])
+@settings(max_examples=60, deadline=None)
+@given(sched=_schedule())
+def test_protocol_invariants_under_random_schedules(scheme, sched):
+    kw = ({"era_freq": 1, "cleanup_freq": 1} if scheme in ("WFE", "HE")
+          else {"epoch_freq": 1, "cleanup_freq": 1} if scheme == "2GEIBR"
+          else {"cleanup_freq": 1})
+    smr = make_scheme(scheme, max_threads=N_THREADS, **kw)
+    tids = [smr.register_thread() for _ in range(N_THREADS)]
+    cells = [AtomicRef(None) for _ in range(N_CELLS)]
+    views = [PtrView(c) for c in cells]
+    protected = {t: set() for t in tids}  # blocks each thread holds
+    in_bracket = {t: False for t in tids}
+
+    def ensure_bracket(t):
+        if not in_bracket[t]:
+            smr.start_op(t)
+            in_bracket[t] = True
+
+    for t, op, c in sched:
+        tid = tids[t]
+        if op == "alloc_publish":
+            ensure_bracket(tid)
+            blk = smr.alloc_block(_Node, tid, 1)
+            old = cells[c].load()
+            cells[c].store(blk)
+            if old is not None and not old.retire_era != 0:
+                pass  # old remains reachable only via protections
+        elif op == "protect":
+            ensure_bracket(tid)
+            got = smr.get_protected(views[c], c, tid)
+            if got is not None:
+                protected[tid].add(got)
+                # I1 check at acquisition: must not already be freed
+                assert not got.freed, f"{scheme}: protected a freed block"
+        elif op == "retire_current":
+            ensure_bracket(tid)
+            blk = cells[c].load()
+            if blk is not None and blk.retire_era in (
+                    getattr(blk, "retire_era", None),):
+                # unlink then retire exactly once
+                cells[c].store(None)
+                try:
+                    smr.retire(blk, tid)
+                except AssertionError:
+                    raise
+        elif op == "clear":
+            if in_bracket[tid]:
+                smr.end_op(tid)
+                in_bracket[tid] = False
+            protected[tid].clear()
+        elif op == "flush":
+            smr.flush(tid)
+        # I1: nothing currently protected may be freed
+        for t2 in tids:
+            for blk in protected[t2]:
+                assert not blk.freed, f"{scheme}: freed a protected block"
+        # I3
+        assert sum(smr.free_count) <= sum(smr.retire_count)
+
+    # I2: release everything, drain, and demand full reclamation
+    for tid in tids:
+        if in_bracket[tid]:
+            smr.end_op(tid)
+        protected[tid].clear()
+    for _ in range(6):
+        for tid in tids:
+            smr.flush(tid)
+    assert smr.unreclaimed() == 0, f"{scheme}: blocks left unreclaimed"
+
+
+@settings(max_examples=30, deadline=None)
+@given(sched=_schedule())
+def test_wfe_forced_slow_path_invariants(sched):
+    """Same invariants with WFE's slow path forced on every protect."""
+    smr = make_scheme("WFE", max_threads=N_THREADS, era_freq=1,
+                      cleanup_freq=1, max_attempts=1)
+    tids = [smr.register_thread() for _ in range(N_THREADS)]
+    cells = [AtomicRef(None) for _ in range(N_CELLS)]
+    views = [PtrView(c) for c in cells]
+    held = {t: set() for t in tids}
+    for t, op, c in sched:
+        tid = tids[t]
+        if op == "alloc_publish":
+            cells[c].store(smr.alloc_block(_Node, tid, 1))
+        elif op == "protect":
+            got = smr.get_protected(views[c], c, tid)
+            if got is not None:
+                assert not got.freed
+                held[tid].add(got)
+        elif op == "retire_current":
+            blk = cells[c].load()
+            if blk is not None:
+                cells[c].store(None)
+                smr.retire(blk, tid)
+        elif op == "clear":
+            smr.clear(tid)
+            held[tid].clear()
+        else:
+            smr.flush(tid)
+        for t2 in tids:
+            for blk in held[t2]:
+                assert not blk.freed, "WFE slow path freed a protected block"
+    for tid in tids:
+        smr.clear(tid)
+    for _ in range(6):
+        for tid in tids:
+            smr.flush(tid)
+    assert smr.unreclaimed() == 0
+    assert sum(smr.slow_path_count) >= sum(
+        1 for _, op, _ in sched if op == "protect")

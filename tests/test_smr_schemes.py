@@ -1,0 +1,298 @@
+"""Unit tests for the SMR schemes themselves (single- and multi-threaded)."""
+
+import threading
+
+import pytest
+
+from repro.core import (
+    INF_ERA,
+    SCHEMES,
+    AtomicInt,
+    AtomicPair,
+    AtomicRef,
+    Block,
+    make_scheme,
+)
+from repro.core.atomics import INVPTR, PtrView
+from repro.core.wfe import WFE
+
+
+class _Box(Block):
+    __slots__ = ("payload",)
+
+    def __init__(self, payload=None):
+        super().__init__()
+        self.payload = payload
+
+    def _poison_payload(self):
+        self.payload = None
+
+
+# ---------------------------------------------------------------- atomics
+def test_atomic_int_ops():
+    a = AtomicInt(5)
+    assert a.load() == 5
+    assert a.fa_add(3) == 5
+    assert a.load() == 8
+    assert a.cas(8, 10)
+    assert not a.cas(8, 11)
+    assert a.load() == 10
+
+
+def test_atomic_pair_wcas():
+    p = AtomicPair((1, 2))
+    assert p.wcas((1, 2), (3, 4))
+    assert not p.wcas((1, 2), (5, 6))
+    assert p.load() == (3, 4)
+    p.store_a(9)
+    assert p.load() == (9, 4)
+
+
+def test_atomic_ref_identity_cas():
+    x, y = object(), object()
+    r = AtomicRef(x)
+    assert r.cas(x, y)
+    assert not r.cas(x, y)
+    assert r.load() is y
+
+
+# ---------------------------------------------------------------- basic protocol
+@pytest.mark.parametrize("name", sorted(SCHEMES))
+def test_alloc_protect_retire_roundtrip(name):
+    smr = make_scheme(name, max_threads=2)
+    tid = smr.register_thread()
+    cell = AtomicRef(None)
+    view = PtrView(cell)
+    smr.start_op(tid)
+    blk = smr.alloc_block(_Box, tid, "hello")
+    cell.store(blk)
+    got = smr.get_protected(view, 0, tid)
+    assert got is blk
+    assert got.payload == "hello"
+    cell.store(None)
+    smr.retire(blk, tid)
+    smr.end_op(tid)
+    # drain: after enough retire/flush cycles the block must be freed
+    for _ in range(200):
+        smr.flush(tid)
+    if smr.bounded_memory:
+        assert blk.freed
+        assert smr.unreclaimed() == 0
+
+
+@pytest.mark.parametrize("name", ["WFE", "HE", "HP", "2GEIBR"])
+def test_protected_block_not_freed(name):
+    """A block under active protection must never be reclaimed."""
+    smr = make_scheme(name, max_threads=2)
+    t0 = smr.register_thread()
+    t1 = smr.register_thread()
+    cell = AtomicRef(None)
+    view = PtrView(cell)
+    smr.start_op(t0)
+    blk = smr.alloc_block(_Box, t0, 42)
+    cell.store(blk)
+    got = smr.get_protected(view, 0, t0)
+    assert got is blk
+    # t1 retires it while t0 still holds protection
+    smr.start_op(t1)
+    cell.store(None)
+    smr.retire(blk, t1)
+    for _ in range(100):
+        smr.flush(t1)
+    assert not blk.freed, f"{name} freed a protected block"
+    assert got.payload == 42
+    # release protection; now it must become reclaimable
+    smr.end_op(t0)
+    smr.end_op(t1)  # IBR/EBR: close t1's own bracket before draining
+    for _ in range(200):
+        smr.flush(t1)
+    assert blk.freed, f"{name} failed to reclaim an unprotected block"
+
+
+# ---------------------------------------------------------------- WFE specifics
+def test_wfe_forced_slow_path_self_completes():
+    """max_attempts=1 skips the fast path; with a quiet era clock the thread
+    self-completes its request (paper lines 37-41)."""
+    smr = WFE(max_threads=2, max_attempts=1)
+    tid = smr.register_thread()
+    cell = AtomicRef(None)
+    blk = smr.alloc_block(_Box, tid, "x")
+    cell.store(blk)
+    got = smr.get_protected(PtrView(cell), 0, tid)
+    assert got is blk
+    assert smr.slow_path_count[tid] == 1
+    assert smr.counter_start.load() == smr.counter_end.load() == 1
+    # request cell must be back to the idle encoding
+    assert smr.state[tid][0].result.load()[0] is not INVPTR
+    # tag advanced for the next slow-path cycle
+    assert smr.reservations[tid][0].load_b() == 1
+
+
+def test_wfe_helping_completes_request():
+    """A stalled slow-path requester is completed by an era advancer."""
+    smr = WFE(max_threads=2, max_attempts=1, era_freq=1, cleanup_freq=1)
+    t0 = smr.register_thread()
+    t1 = smr.register_thread()
+    cell = AtomicRef(None)
+    parent = smr.alloc_block(_Box, t0, "parent")
+    blk = smr.alloc_block(_Box, t0, "target")
+    cell.store(blk)
+    # manually stage t0's slow-path request (as if it stalled mid-call)
+    st = smr.state[t0][0]
+    st.pointer.store(PtrView(cell))
+    st.era.store(parent.alloc_era)
+    tag = smr.reservations[t0][0].load_b()
+    smr.counter_start.fa_add(1)
+    st.result.store((INVPTR, tag))
+    # t1 advances the era -> must help t0 first
+    smr.increment_era(t1)
+    res_ptr, res_era = st.result.load()
+    assert res_ptr is blk, "helper did not produce the output"
+    assert res_era != INF_ERA
+    # the helper handed the reservation over (era set, tag advanced)
+    era, new_tag = smr.reservations[t0][0].load()
+    assert new_tag == tag + 1
+    assert era == res_era
+    # special reservations were cleared on exit
+    assert smr.reservations[t1][smr.max_hes].load_a() == INF_ERA
+    assert smr.reservations[t1][smr.max_hes + 1].load_a() == INF_ERA
+
+
+def test_wfe_cleanup_order_counters():
+    smr = WFE(max_threads=1, era_freq=1, cleanup_freq=1)
+    tid = smr.register_thread()
+    blks = [smr.alloc_block(_Box, tid, i) for i in range(20)]
+    for b in blks:
+        smr.retire(b, tid)
+    for _ in range(50):
+        smr.flush(tid)
+    assert all(b.freed for b in blks)
+    assert smr.unreclaimed() == 0
+
+
+# ---------------------------------------------------------------- concurrency smoke
+@pytest.mark.parametrize("name", ["WFE", "HE", "HP", "EBR", "2GEIBR"])
+def test_concurrent_protect_retire_stress(name):
+    """Readers chase a pointer cell while a writer swaps + retires blocks.
+
+    The poisoning free() turns any unsafe reclamation into an assertion.
+    """
+    n_readers, n_swaps = 3, 400
+    smr = make_scheme(name, max_threads=n_readers + 1, **(
+        {"era_freq": 4, "cleanup_freq": 4} if name in ("WFE", "HE") else
+        {"epoch_freq": 4, "cleanup_freq": 4} if name in ("EBR", "2GEIBR") else
+        {"cleanup_freq": 4}
+    ))
+    cell = AtomicRef(None)
+    view = PtrView(cell)
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        tid = smr.register_thread()
+        cur = smr.alloc_block(_Box, tid, 0)
+        cell.store(cur)
+        for i in range(1, n_swaps):
+            new = smr.alloc_block(_Box, tid, i)
+            cell.store(new)
+            smr.retire(cur, tid)
+            cur = new
+        stop.set()
+
+    def reader():
+        tid = smr.register_thread()
+        try:
+            while not stop.is_set():
+                smr.start_op(tid)
+                blk = smr.get_protected(view, 0, tid)
+                if blk is not None:
+                    assert not blk.freed, "reader saw a freed block"
+                    _ = blk.payload
+                smr.end_op(tid)
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer)] + [
+        threading.Thread(target=reader) for _ in range(n_readers)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors[0] if errors else None
+
+
+def test_wfe_forced_slow_path_concurrent():
+    """Paper §5: the implementation stays correct with the slow path forced."""
+    n_readers = 3
+    smr = WFE(max_threads=n_readers + 1, max_attempts=1, era_freq=1, cleanup_freq=1)
+    cell = AtomicRef(None)
+    view = PtrView(cell)
+    start = threading.Barrier(n_readers + 1)
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        tid = smr.register_thread()
+        cur = smr.alloc_block(_Box, tid, 0)
+        cell.store(cur)
+        start.wait()
+        for i in range(1, 300):
+            new = smr.alloc_block(_Box, tid, i)
+            cell.store(new)
+            smr.retire(cur, tid)
+            cur = new
+        stop.set()
+
+    def reader():
+        tid = smr.register_thread()
+        start.wait()
+        try:
+            # a minimum op count guarantees the (always-forced) slow path is
+            # exercised even if the writer outruns thread startup
+            ops = 0
+            while not stop.is_set() or ops < 25:
+                smr.start_op(tid)
+                blk = smr.get_protected(view, 0, tid)
+                if blk is not None:
+                    assert not blk.freed
+                smr.end_op(tid)
+                ops += 1
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer)] + [
+        threading.Thread(target=reader) for _ in range(n_readers)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=180)
+    assert not errors, errors[0] if errors else None
+    assert sum(smr.slow_path_count) > 0, "slow path was never exercised"
+
+
+def test_ebr_stalled_thread_blocks_reclamation():
+    """EBR's unbounded-memory failure mode (paper §2.1): a reader that never
+    leaves its epoch pins every later retirement."""
+    smr = make_scheme("EBR", max_threads=2, epoch_freq=1, cleanup_freq=1)
+    t0 = smr.register_thread()
+    t1 = smr.register_thread()
+    smr.start_op(t0)  # t0 stalls inside an operation forever
+    blks = [smr.alloc_block(_Box, t1, i) for i in range(50)]
+    for b in blks:
+        smr.retire(b, t1)
+    for _ in range(50):
+        smr.flush(t1)
+    assert smr.unreclaimed() == 50, "EBR reclaimed despite a stalled reader"
+    # WFE under the same scenario reclaims everything
+    wfe = make_scheme("WFE", max_threads=2, era_freq=1, cleanup_freq=1)
+    w0 = wfe.register_thread()
+    w1 = wfe.register_thread()
+    wfe.start_op(w0)  # no reservation held -> does not block
+    blks = [wfe.alloc_block(_Box, w1, i) for i in range(50)]
+    for b in blks:
+        wfe.retire(b, w1)
+    for _ in range(50):
+        wfe.flush(w1)
+    assert wfe.unreclaimed() == 0
