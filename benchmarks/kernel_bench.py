@@ -1,9 +1,15 @@
-"""Kernel benchmarks: era_scan + paged_attention vs their jnp references.
+"""Kernel benchmarks: era_scan + paged_attention vs their jnp references,
+plus the three ``cleanup_batch`` reclamation backends head-to-head.
 
 Wall-clock on this host measures the INTERPRETED Pallas path (CPU Python
 loop — not meaningful as TPU perf) and the jit'd jnp reference; the
 reported roofline numbers are the analytic VPU/MXU estimates for TPU v5e
 (the target), derived from the same byte/flop counting the dry-run uses.
+
+The backend comparison (``bench_cleanup_backends``) is the serving-relevant
+number: scalar is the paper's per-block Python loop, numpy the vectorized
+era-table scan, pallas the TPU kernel (jnp fallback timing on CPU hosts).
+The batched backends must beat scalar from R ≈ 1k retired blocks.
 """
 
 from __future__ import annotations
@@ -12,7 +18,9 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.era_table import batched_can_delete
 from repro.kernels import ref
 from repro.kernels.era_scan import INF_ERA32
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
@@ -68,9 +76,52 @@ def bench_paged_attention(b=8, kh=2, g=4, d=128, bs=16, nblk=64):
             "arith_intensity": flops / kv_bytes}
 
 
+def bench_cleanup_backends(rs=(256, 1024, 4096, 16384), t=64, h=10):
+    """The tentpole comparison: one cleanup_batch scan per backend.
+
+    T·H = 640 reservation slots (a 64-thread fleet with WFE's H+2 layout);
+    ~half the slots empty, intervals randomized.  Times exclude retire-list
+    construction — the era table maintains the arrays incrementally, so the
+    scan IS the whole reclamation cost.
+    """
+    rng = np.random.default_rng(0)
+    s = t * h
+    lo = rng.integers(0, 1000, s).astype(np.int32)
+    hi = (lo + rng.integers(0, 50, s)).astype(np.int32)
+    lo[rng.random(s) < 0.5] = INF_ERA32
+    out = {}
+    print(f"\ncleanup_batch backends (T*H={s} reservation slots)")
+    print(f"{'R':>8s} {'scalar ms':>10s} {'numpy ms':>10s} {'pallas ms':>10s}"
+          f" {'numpy x':>8s} {'pallas x':>9s}")
+    for r in rs:
+        alloc = rng.integers(0, 1000, r).astype(np.int32)
+        retire = (alloc + rng.integers(0, 100, r)).astype(np.int32)
+        times = {}
+        for backend in ("scalar", "numpy", "pallas"):
+            reps = 1 if backend == "scalar" else 5
+            batched_can_delete(alloc, retire, lo, hi, backend)  # warm/compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                mask = batched_can_delete(alloc, retire, lo, hi, backend)
+            times[backend] = (time.perf_counter() - t0) / reps * 1e3
+            del mask
+        sp_np = times["scalar"] / times["numpy"]
+        sp_pl = times["scalar"] / times["pallas"]
+        print(f"{r:>8d} {times['scalar']:>10.2f} {times['numpy']:>10.3f} "
+              f"{times['pallas']:>10.3f} {sp_np:>7.1f}x {sp_pl:>8.1f}x")
+        out[r] = {**times, "numpy_speedup": sp_np, "pallas_speedup": sp_pl}
+    beat = all(out[r]["numpy_speedup"] > 1 and out[r]["pallas_speedup"] > 1
+               for r in rs if r >= 1024)
+    print("batched backends beat scalar at R >= 1k:",
+          "PASS" if beat else "FAIL")
+    out["batched_beats_scalar_at_1k"] = beat
+    return out
+
+
 def run():
     print("\n### Kernel benchmarks (ref path timed on CPU; TPU analytic)")
     return {"era_scan": bench_era_scan(),
+            "cleanup_backends": bench_cleanup_backends(),
             "paged_attention": bench_paged_attention()}
 
 

@@ -3,7 +3,14 @@
 A stalled reader (holds its bracket/reservation forever) while a writer
 churns: EBR's unreclaimed count grows without bound; WFE/HE/HP stay bounded.
 This is THE property that justifies WFE over EBR (paper §2.1).
+
+``run_batched()`` replays the same scenario draining with each
+``cleanup_batch`` backend (scalar / numpy / pallas) instead of the scalar
+``flush`` — the boundedness picture must be identical, demonstrating the
+vectorized reclamation path preserves the paper's §5 result.
 """
+
+import time
 
 from repro.core import make_scheme
 from repro.core.atomics import AtomicRef, PtrView
@@ -56,6 +63,58 @@ def run(churn: int = 2000):
         print(f"{scheme:>8s} {un:>12d} {str(bounded):>8s}")
     assert out["EBR"]["unreclaimed"] >= churn - 2, "EBR should pin everything"
     assert out["WFE"]["bounded"] and out["HE"]["bounded"]
+    out["batched"] = run_batched(churn=churn)
+    return out
+
+
+def _churn_with_stalled_reader(scheme: str, churn: int):
+    """Same scenario as run(): reader t0 stalls holding a reservation while
+    writer t1 churns; returns (smr, writer tid) with the retire list full."""
+    kw = ({"era_freq": 1, "cleanup_freq": 10 ** 9}
+          if scheme in ("WFE", "HE") else
+          {"epoch_freq": 1, "cleanup_freq": 10 ** 9})
+    smr = make_scheme(scheme, max_threads=2, **kw)
+    t0 = smr.register_thread()
+    t1 = smr.register_thread()
+    cell = AtomicRef(None)
+    first = smr.alloc_block(_Node, t0, 0)
+    cell.store(first)
+    smr.start_op(t0)
+    smr.get_protected(PtrView(cell), 0, t0)
+    cur = first
+    for i in range(1, churn):
+        new = smr.alloc_block(_Node, t1, i)
+        cell.store(new)
+        smr.retire(cur, t1)
+        cur = new
+    return smr, t1
+
+
+def run_batched(churn: int = 2000):
+    print(f"\n### Same stalled-reader scenario, drained via cleanup_batch "
+          f"(churn={churn})")
+    print(f"{'scheme':>8s} {'backend':>8s} {'unreclaimed':>12s} "
+          f"{'bounded':>8s} {'drain ms':>9s}")
+    out = {}
+    for scheme in ("WFE", "HE", "EBR", "2GEIBR"):
+        out[scheme] = {}
+        for backend in ("scalar", "numpy", "pallas"):
+            smr, t1 = _churn_with_stalled_reader(scheme, churn)
+            t0w = time.perf_counter()
+            smr.cleanup_batch(t1, backend)
+            dt = (time.perf_counter() - t0w) * 1e3
+            un = smr.unreclaimed()
+            bounded = un < churn // 4
+            out[scheme][backend] = {"unreclaimed": un, "bounded": bounded,
+                                    "drain_ms": dt}
+            print(f"{scheme:>8s} {backend:>8s} {un:>12d} "
+                  f"{str(bounded):>8s} {dt:>9.2f}")
+        counts = {b: out[scheme][b]["unreclaimed"]
+                  for b in ("scalar", "numpy", "pallas")}
+        assert len(set(counts.values())) == 1, (
+            f"{scheme}: backends disagree on the drain: {counts}")
+    assert all(out["WFE"][b]["bounded"] for b in out["WFE"])
+    assert not any(out["EBR"][b]["bounded"] for b in out["EBR"])
     return out
 
 

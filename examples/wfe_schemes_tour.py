@@ -5,9 +5,11 @@ bounded memory vs progress guarantee.
 Run:  PYTHONPATH=src python examples/wfe_schemes_tour.py
 """
 
+import os
 import sys
 
-sys.path.insert(0, "benchmarks") if "benchmarks" not in sys.path else None
+# the benchmarks package lives at the repo root, one level up from here
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import run_kv_workload  # noqa: E402
 from repro.core import SCHEMES, make_scheme  # noqa: E402

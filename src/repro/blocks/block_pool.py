@@ -15,9 +15,11 @@ The SMR mapping (DESIGN.md §2.1):
   (``retire``/``alloc_block``/``get_protected`` are all wait-free bounded)
   — a stalled completion thread can neither block admission nor make pool
   memory unbounded;
-* ``cleanup()`` uses the vectorized era_scan (kernels/) when the retire
-  list is large: the paper's R×(T·H) interval scan is the reclamation hot
-  path and maps to a single VPU compare-reduce.
+* ``cleanup()`` uses the scheme's batched ``cleanup_batch()`` (backed by
+  ``core/era_table.py``) when the retire list is large: the paper's
+  R×(T·H) interval scan is the reclamation hot path and maps to a single
+  NumPy compare-reduce or the Pallas ``era_scan`` VPU kernel
+  (``cleanup_backend`` / ``use_kernel`` select the backend).
 
 Free-slot recycling is a Treiber stack of fresh cons cells (identity-CAS,
 so ABA-free in Python).  Note the paper's scope: *reclamation* is
@@ -29,8 +31,6 @@ from __future__ import annotations
 
 import threading
 from typing import Callable, List, Optional
-
-import numpy as np
 
 from repro.core import Block, make_scheme
 from repro.core.atomics import INF_ERA, AtomicRef, PtrView
@@ -107,8 +107,16 @@ class BlockPool:
     """
 
     def __init__(self, n_blocks: int, *, scheme: str = "WFE",
-                 max_threads: int = 16, max_hes: int = 8, **smr_kwargs):
+                 max_threads: int = 16, max_hes: int = 8,
+                 cleanup_backend: str = "numpy", use_kernel: bool = False,
+                 vectorized_threshold: int = 64, **smr_kwargs):
         self.n_blocks = n_blocks
+        # reclamation backend policy: retire lists below the threshold take
+        # the scalar flush (batch setup isn't worth it), larger ones the
+        # selected batched backend; use_kernel=True upgrades numpy -> pallas
+        self.cleanup_backend = "pallas" if use_kernel else cleanup_backend
+        self.vectorized_threshold = vectorized_threshold
+        self._drain_lock = threading.Lock()
         if scheme == "HP":
             # the paper's motivating contrast: an HP slot protects ONE
             # pointer, so a step snapshot naming thousands of blocks cannot
@@ -184,71 +192,43 @@ class BlockPool:
             row.store(None)
 
     # ---------------------------------------------------------- reclamation
-    def cleanup(self, tid: int, *, vectorized_threshold: int = 64,
-                use_kernel: bool = False) -> None:
-        """Drain this thread's retire list.
+    def cleanup(self, tid: int, *, vectorized_threshold: Optional[int] = None,
+                use_kernel: Optional[bool] = None,
+                backend: Optional[str] = None) -> int:
+        """Drain this thread's retire list.  Returns the number freed.
 
-        Large lists take the vectorized era_scan path (the Pallas hot spot);
-        it preserves WFE's Theorem-4 scan order by running the segment scans
-        in the same sequence as the scalar cleanup().
+        Short lists take the scheme's scalar ``flush`` (batch setup costs
+        more than it saves); longer ones take ``cleanup_batch`` with the
+        pool's configured backend.  The batched WFE path preserves
+        Theorem 4's scan order (see ``WFE.deletable_mask``).
         """
         smr = self.smr
-        lst = smr.retire_lists[tid]
-        # the vectorized scan encodes WFE's reservation layout (normal +
-        # two special slots + helping counters); other schemes take their
-        # own scalar cleanup
-        if len(lst) < vectorized_threshold or smr.name != "WFE":
+        threshold = (self.vectorized_threshold if vectorized_threshold is None
+                     else vectorized_threshold)
+        if backend is None:
+            backend = ("pallas" if use_kernel else
+                       self.cleanup_backend if use_kernel is None else "numpy")
+        before = smr.free_count[tid]
+        if len(smr.retire_lists[tid]) < threshold or \
+                not smr.supports_batched_cleanup:
             smr.flush(tid)
-            return
-        self._cleanup_vectorized(tid, use_kernel)
+            return smr.free_count[tid] - before
+        return smr.cleanup_batch(tid, backend)
 
-    def _cleanup_vectorized(self, tid: int, use_kernel: bool) -> None:
-        from repro.kernels import can_delete_blocks
-        from repro.kernels.ref import INF_ERA32
+    def cleanup_all(self, *, backend: Optional[str] = None) -> int:
+        """Cross-thread batched drain: EVERY thread's retire list, one scan.
 
-        smr = self.smr
-        lst = smr.retire_lists[tid]
-        blocks = list(lst)
-        alloc = np.array([b.alloc_era for b in blocks], np.int64)
-        retire = np.array([b.retire_era for b in blocks], np.int64)
-        mh = smr.max_hes
-
-        def snapshot(js, je):
-            rows = []
-            for i in range(smr.max_threads):
-                row = []
-                for j in range(js, je):
-                    era = smr.reservations[i][j].load_a()
-                    row.append(INF_ERA32 if era == INF_ERA else int(era))
-                rows.append(row)
-            return np.array(rows, np.int64)
-
-        def clip(x):
-            return np.minimum(x, INF_ERA32 - 1).astype(np.int32)
-
-        # Theorem 4 scan order: normal -> special1; if any slow path is
-        # active also special2 -> normal again.
-        ce = smr.counter_end.load()
-        ok = np.array(can_delete_blocks(
-            clip(alloc), clip(retire), snapshot(0, mh),
-            use_kernel=use_kernel))
-        ok &= np.asarray(can_delete_blocks(
-            clip(alloc), clip(retire), snapshot(mh, mh + 1),
-            use_kernel=use_kernel))
-        if ce != smr.counter_start.load():
-            ok &= np.asarray(can_delete_blocks(
-                clip(alloc), clip(retire), snapshot(mh + 1, mh + 2),
-                use_kernel=use_kernel))
-            ok &= np.asarray(can_delete_blocks(
-                clip(alloc), clip(retire), snapshot(0, mh),
-                use_kernel=use_kernel))
-        remaining = []
-        for blk, deletable in zip(blocks, ok):
-            if deletable:
-                smr.free(blk, tid)
-            else:
-                remaining.append(blk)
-        lst[:] = remaining
+        Intended for quiescent points — the serve loop's idle ticks and
+        engine shutdown — where one fused scan (all lists concatenated,
+        each reservation phase snapshotted once for the whole fleet) beats
+        per-thread drains.  Safe concurrently with owner threads retiring
+        and cleaning: every cleanup path holds the per-list lock
+        (``ArrayRetireList.lock``), and this pool-level lock additionally
+        serializes whole-fleet drains against each other.
+        """
+        backend = self.cleanup_backend if backend is None else backend
+        with self._drain_lock:
+            return self.smr.cleanup_batch_all(backend)
 
     # ---------------------------------------------------------- metrics
     @property

@@ -80,7 +80,7 @@ class Scheduler:
         self._slots = deque(range(max_inflight))
         self.stats: Dict[str, int] = {
             "admitted": 0, "completed": 0, "evictions": 0, "steps": 0,
-            "deadline_cutoffs": 0,
+            "deadline_cutoffs": 0, "reclaimed": 0,
         }
 
     # --------------------------------------------------------------- intake
@@ -182,7 +182,9 @@ class Scheduler:
                 self.stats["completed"] += 1
         self.pool.release_step(plan.slot, tid)
         self._slots.append(plan.slot)
-        self.pool.cleanup(tid)
+        # batched drain (era_table backends) once the list crosses the
+        # pool's vectorized threshold; scalar flush below it
+        self.stats["reclaimed"] += self.pool.cleanup(tid)
 
     # --------------------------------------------------------------- evict
     def _pick_victim(self, exclude: Request) -> Optional[Request]:
@@ -201,4 +203,4 @@ class Scheduler:
         with self._qlock:
             self.queue.append(req)
         self.stats["evictions"] += 1
-        self.pool.cleanup(tid)
+        self.stats["reclaimed"] += self.pool.cleanup(tid)

@@ -20,6 +20,8 @@ from .atomics import (
     TriplePtrView,
 )
 from .ebr import EBR
+from .era_table import (BACKENDS, ArrayRetireList, EraTable,
+                        batched_can_delete)
 from .hazard_eras import HazardEras
 from .hazard_pointers import HazardPointers
 from .ibr import IBR2GE
@@ -49,6 +51,10 @@ __all__ = [
     "INF_ERA",
     "INVPTR",
     "POISON",
+    "BACKENDS",
+    "ArrayRetireList",
+    "EraTable",
+    "batched_can_delete",
     "AtomicInt",
     "AtomicPair",
     "AtomicRef",

@@ -12,6 +12,18 @@ property (lock-freedom of the primitive itself) is emulated, which DESIGN.md
 All higher layers (WFE, HE, HP, EBR, IBR and the data structures) use only
 this module for shared mutable state, so the algorithms above this line are
 port-faithful to the paper's pseudo-code.
+
+Mirrored cells
+--------------
+``AtomicInt`` and ``AtomicPair`` optionally carry a *mirror*: an
+``(ndarray, row, col)`` target that every store/CAS writes through to under
+the cell's own lock.  The era-table layer (``core/era_table.py``) binds each
+reservation slot to one int32 array element this way, so the batched
+reclamation scan reads reservation snapshots from a contiguous array with
+exactly the per-slot atomicity the scalar ``can_delete`` loop gets from
+individual ``load()`` calls.  Era values at or above ``MIRROR_INF`` (notably
+``INF_ERA``) are clamped to ``MIRROR_INF``, the int32 "no reservation"
+sentinel the kernels use.
 """
 
 from __future__ import annotations
@@ -21,6 +33,7 @@ from typing import Any, Tuple
 
 __all__ = [
     "INF_ERA",
+    "MIRROR_INF",
     "INVPTR",
     "AtomicInt",
     "AtomicRef",
@@ -33,6 +46,25 @@ __all__ = [
 # The paper uses ∞ for "no reservation".  Eras are Python ints (unbounded),
 # so any finite era compares below INF_ERA.
 INF_ERA: int = (1 << 63) - 1
+
+# int32 image of INF_ERA in mirrored arrays (kernels compare eras as int32;
+# the era clock advances once per alloc/retire batch, so a 31-bit horizon
+# outlasts any realistic run between restarts).
+MIRROR_INF: int = (1 << 31) - 1
+
+
+def _mirror_write(mirror, value) -> None:
+    """Write ``value`` through to an (ndarray, row, col) mirror target.
+
+    Only the true ∞ sentinel reads back as "empty"; a finite era at or past
+    the int32 horizon saturates to MIRROR_INF - 1 so it still reads as a
+    live reservation (delaying reclamation is safe, skipping it is not).
+    """
+    arr, row, col = mirror
+    if isinstance(value, int) and value != INF_ERA:
+        arr[row, col] = min(max(value, 0), MIRROR_INF - 1)
+    else:
+        arr[row, col] = MIRROR_INF
 
 
 class _InvPtr:
@@ -52,13 +84,20 @@ INVPTR = _InvPtr()
 
 
 class AtomicInt:
-    """Single-word atomic integer: load/store/CAS/F&A."""
+    """Single-word atomic integer: load/store/CAS/F&A.
 
-    __slots__ = ("_v", "_lock")
+    ``mirror=(ndarray, row, col)`` write-throughs every update into an int32
+    array element under this cell's lock (see module docstring).
+    """
 
-    def __init__(self, value: int = 0):
+    __slots__ = ("_v", "_lock", "_mirror")
+
+    def __init__(self, value: int = 0, mirror=None):
         self._v = value
         self._lock = threading.Lock()
+        self._mirror = mirror
+        if mirror is not None:
+            _mirror_write(mirror, value)
 
     def load(self) -> int:
         with self._lock:
@@ -67,11 +106,15 @@ class AtomicInt:
     def store(self, value: int) -> None:
         with self._lock:
             self._v = value
+            if self._mirror is not None:
+                _mirror_write(self._mirror, value)
 
     def cas(self, expected: int, new: int) -> bool:
         with self._lock:
             if self._v == expected:
                 self._v = new
+                if self._mirror is not None:
+                    _mirror_write(self._mirror, new)
                 return True
             return False
 
@@ -80,6 +123,8 @@ class AtomicInt:
         with self._lock:
             old = self._v
             self._v = old + delta
+            if self._mirror is not None:
+                _mirror_write(self._mirror, self._v)
             return old
 
 
@@ -118,11 +163,23 @@ class AtomicPair:
     64-bit stores that do not touch the sibling word.
     """
 
-    __slots__ = ("_a", "_b", "_lock")
+    __slots__ = ("_a", "_b", "_lock", "_mirror_a", "_mirror_b")
 
-    def __init__(self, pair: Tuple[Any, Any]):
+    def __init__(self, pair: Tuple[Any, Any], mirror_a=None, mirror_b=None):
         self._a, self._b = pair
         self._lock = threading.Lock()
+        self._mirror_a = mirror_a
+        self._mirror_b = mirror_b
+        if mirror_a is not None:
+            _mirror_write(mirror_a, self._a)
+        if mirror_b is not None:
+            _mirror_write(mirror_b, self._b)
+
+    def _sync_mirrors(self) -> None:
+        if self._mirror_a is not None:
+            _mirror_write(self._mirror_a, self._a)
+        if self._mirror_b is not None:
+            _mirror_write(self._mirror_b, self._b)
 
     def load(self) -> Tuple[Any, Any]:
         with self._lock:
@@ -139,19 +196,25 @@ class AtomicPair:
     def store(self, pair: Tuple[Any, Any]) -> None:
         with self._lock:
             self._a, self._b = pair
+            self._sync_mirrors()
 
     def store_a(self, a: Any) -> None:
         with self._lock:
             self._a = a
+            if self._mirror_a is not None:
+                _mirror_write(self._mirror_a, a)
 
     def store_b(self, b: Any) -> None:
         with self._lock:
             self._b = b
+            if self._mirror_b is not None:
+                _mirror_write(self._mirror_b, b)
 
     def wcas(self, expected: Tuple[Any, Any], new: Tuple[Any, Any]) -> bool:
         with self._lock:
             if self._a == expected[0] and self._b == expected[1]:
                 self._a, self._b = new
+                self._sync_mirrors()
                 return True
             return False
 

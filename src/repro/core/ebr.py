@@ -12,7 +12,10 @@ from __future__ import annotations
 
 from typing import Any, List, Optional, Type
 
-from .atomics import INF_ERA, AtomicInt
+import numpy as np
+
+from .atomics import INF_ERA, MIRROR_INF, AtomicInt
+from .era_table import EraTable
 from .smr_base import Block, SMRScheme
 
 __all__ = ["EBR"]
@@ -24,14 +27,18 @@ class EBR(SMRScheme):
     name = "EBR"
     wait_free = False
     bounded_memory = False  # a stalled thread blocks reclamation
+    supports_batched_cleanup = True
 
     def __init__(self, max_threads: int, epoch_freq: int = 32, cleanup_freq: int = 32):
         super().__init__(max_threads)
         self.epoch_freq = max(1, epoch_freq)
         self.cleanup_freq = max(1, cleanup_freq)
         self.global_epoch = AtomicInt(1)
+        # announcements mirror into the era table for the batched scan
+        self.era_table = EraTable(max_threads, 1)
         self.announce: List[AtomicInt] = [
-            AtomicInt(_QUIESCENT) for _ in range(max_threads)
+            AtomicInt(_QUIESCENT, mirror=self.era_table.mirror_lo(i, 0))
+            for i in range(max_threads)
         ]
         self.alloc_counter = [0] * max_threads
         self.retire_counter = [0] * max_threads
@@ -68,13 +75,14 @@ class EBR(SMRScheme):
             if e != _QUIESCENT and e < min_active:
                 min_active = e
         remaining: List[Block] = []
-        for blk in self.retire_lists[tid]:
-            # Freed only after two grace periods beyond the retire epoch.
-            if blk.retire_era + 2 <= min_active:
-                self.free(blk, tid)
-            else:
-                remaining.append(blk)
-        self.retire_lists[tid][:] = remaining
+        with self.retire_lists[tid].lock:  # exclude concurrent batched drains
+            for blk in self.retire_lists[tid]:
+                # Freed only after two grace periods beyond the retire epoch.
+                if blk.retire_era + 2 <= min_active:
+                    self.free(blk, tid)
+                else:
+                    remaining.append(blk)
+            self.retire_lists[tid][:] = remaining
 
     def clear(self, tid: int) -> None:
         pass  # protection is the epoch bracket, not per-pointer state
@@ -82,3 +90,26 @@ class EBR(SMRScheme):
     def flush(self, tid: int) -> None:
         self.global_epoch.fa_add(1)
         self.cleanup(tid)
+
+    def cleanup_batch(self, tid: int, backend: str = "numpy",
+                      **backend_kwargs) -> int:
+        # like flush: drains must advance the epoch or the grace-period
+        # condition (retire + 2 <= min_active) can never become true
+        self.global_epoch.fa_add(1)
+        return super().cleanup_batch(tid, backend, **backend_kwargs)
+
+    def cleanup_batch_all(self, backend: str = "numpy",
+                          **backend_kwargs) -> int:
+        self.global_epoch.fa_add(1)
+        return super().cleanup_batch_all(backend, **backend_kwargs)
+
+    def _reservation_phases(self):
+        # Grace-period rule as an interval scan: a block stays iff some
+        # announcement e (or the global epoch itself) has e < retire + 2,
+        # i.e. the pseudo-interval [e - 1, ∞) overlaps [*, retire_era].
+        ann, _ = self.era_table.snapshot()
+        ge = self.global_epoch.load()
+        lo = np.append(ann, min(ge, MIRROR_INF - 1)).astype(np.int32)
+        np.subtract(lo, 1, out=lo, where=lo != MIRROR_INF)
+        hi = np.full_like(lo, MIRROR_INF - 1)
+        return [(lo, hi)]

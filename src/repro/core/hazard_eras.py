@@ -16,6 +16,7 @@ from __future__ import annotations
 from typing import Any, List, Optional, Type
 
 from .atomics import INF_ERA, AtomicInt
+from .era_table import EraTable
 from .smr_base import Block, SMRScheme
 
 __all__ = ["HazardEras"]
@@ -25,6 +26,7 @@ class HazardEras(SMRScheme):
     name = "HE"
     wait_free = False
     bounded_memory = True
+    supports_batched_cleanup = True
 
     def __init__(
         self,
@@ -38,9 +40,13 @@ class HazardEras(SMRScheme):
         self.era_freq = max(1, era_freq)
         self.cleanup_freq = max(1, cleanup_freq)
         self.global_era = AtomicInt(1)
-        # reservations[tid][j] = era (INF_ERA when unreserved)
+        # reservations[tid][j] = era (INF_ERA when unreserved), mirrored into
+        # the era table for the batched cleanup scan
+        self.era_table = EraTable(max_threads, max_hes)
         self.reservations: List[List[AtomicInt]] = [
-            [AtomicInt(INF_ERA) for _ in range(max_hes)] for _ in range(max_threads)
+            [AtomicInt(INF_ERA, mirror=self.era_table.mirror_lo(i, j))
+             for j in range(max_hes)]
+            for i in range(max_threads)
         ]
         self.alloc_counter = [0] * max_threads
         self.retire_counter = [0] * max_threads
@@ -94,12 +100,17 @@ class HazardEras(SMRScheme):
 
     def cleanup(self, tid: int) -> None:
         remaining: List[Block] = []
-        for blk in self.retire_lists[tid]:
-            if self.can_delete(blk, 0, self.max_hes):
-                self.free(blk, tid)
-            else:
-                remaining.append(blk)
-        self.retire_lists[tid][:] = remaining
+        with self.retire_lists[tid].lock:  # exclude concurrent batched drains
+            for blk in self.retire_lists[tid]:
+                if self.can_delete(blk, 0, self.max_hes):
+                    self.free(blk, tid)
+                else:
+                    remaining.append(blk)
+            self.retire_lists[tid][:] = remaining
 
     def flush(self, tid: int) -> None:
         self.cleanup(tid)
+
+    def _reservation_phases(self):
+        # HE's scan has no ordering obligation: one snapshot of all slots
+        return [self.era_table.snapshot()]

@@ -60,12 +60,13 @@ class HazardPointers(SMRScheme):
                 if p is not None:
                     protected.add(id(p))
         remaining: List[Block] = []
-        for blk in self.retire_lists[tid]:
-            if id(blk) in protected:
-                remaining.append(blk)
-            else:
-                self.free(blk, tid)
-        self.retire_lists[tid][:] = remaining
+        with self.retire_lists[tid].lock:  # exclude concurrent batched drains
+            for blk in self.retire_lists[tid]:
+                if id(blk) in protected:
+                    remaining.append(blk)
+                else:
+                    self.free(blk, tid)
+            self.retire_lists[tid][:] = remaining
 
     def transfer(self, src: int, dst: int, tid: int) -> None:
         self.hp[tid][dst].store(self.hp[tid][src].load())

@@ -15,6 +15,7 @@ from __future__ import annotations
 from typing import Any, List, Optional, Type
 
 from .atomics import INF_ERA, AtomicInt, AtomicPair
+from .era_table import EraTable
 from .smr_base import Block, SMRScheme
 
 __all__ = ["IBR2GE"]
@@ -24,15 +25,23 @@ class IBR2GE(SMRScheme):
     name = "2GEIBR"
     wait_free = False
     bounded_memory = True
+    supports_batched_cleanup = True
+    # block lifetime = [birth_epoch, retire_era] (the scheme's own stamping)
+    retire_era_fields = ("birth_epoch", "retire_era")
 
     def __init__(self, max_threads: int, epoch_freq: int = 32, cleanup_freq: int = 32):
         super().__init__(max_threads)
         self.epoch_freq = max(1, epoch_freq)
         self.cleanup_freq = max(1, cleanup_freq)
         self.global_epoch = AtomicInt(1)
-        # (lower, upper); (INF, INF) when inactive
+        # (lower, upper); (INF, INF) when inactive.  Both bounds mirror into
+        # a true interval era table (lo and hi arrays) for the batched scan.
+        self.era_table = EraTable(max_threads, 1, interval=True)
         self.intervals: List[AtomicPair] = [
-            AtomicPair((INF_ERA, INF_ERA)) for _ in range(max_threads)
+            AtomicPair((INF_ERA, INF_ERA),
+                       mirror_a=self.era_table.mirror_lo(i, 0),
+                       mirror_b=self.era_table.mirror_hi(i, 0))
+            for i in range(max_threads)
         ]
         self.alloc_counter = [0] * max_threads
         self.retire_counter = [0] * max_threads
@@ -75,23 +84,29 @@ class IBR2GE(SMRScheme):
     def cleanup(self, tid: int) -> None:
         snapshot = [self.intervals[i].load() for i in range(self.max_threads)]
         remaining: List[Block] = []
-        for blk in self.retire_lists[tid]:
-            conflict = False
-            for lo, hi in snapshot:
-                if lo == INF_ERA:
-                    continue
-                # interval [lo, hi] vs lifetime [birth, retire]
-                if not (blk.retire_era < lo or blk.birth_epoch > hi):
-                    conflict = True
-                    break
-            if conflict:
-                remaining.append(blk)
-            else:
-                self.free(blk, tid)
-        self.retire_lists[tid][:] = remaining
+        with self.retire_lists[tid].lock:  # exclude concurrent batched drains
+            for blk in self.retire_lists[tid]:
+                conflict = False
+                for lo, hi in snapshot:
+                    if lo == INF_ERA:
+                        continue
+                    # interval [lo, hi] vs lifetime [birth, retire]
+                    if not (blk.retire_era < lo or blk.birth_epoch > hi):
+                        conflict = True
+                        break
+                if conflict:
+                    remaining.append(blk)
+                else:
+                    self.free(blk, tid)
+            self.retire_lists[tid][:] = remaining
 
     def clear(self, tid: int) -> None:
         pass  # the interval bracket is the protection
 
     def flush(self, tid: int) -> None:
         self.cleanup(tid)
+
+    def _reservation_phases(self):
+        # one snapshot of the (lo, hi) interval per thread; conflict iff
+        # lo <= retire and birth <= hi — exactly the scalar test above
+        return [self.era_table.snapshot()]

@@ -15,9 +15,12 @@ stale data.
 from __future__ import annotations
 
 import threading
-from typing import Any, List, Optional, Type
+from typing import Any, List, Optional, Tuple, Type
+
+import numpy as np
 
 from .atomics import INF_ERA
+from .era_table import ArrayRetireList, batched_can_delete
 
 __all__ = ["Block", "SMRScheme", "POISON"]
 
@@ -61,6 +64,9 @@ class SMRScheme:
     wait_free: bool = False
     #: True if retired-but-unreclaimed memory is bounded even with stalled threads
     bounded_memory: bool = False
+    #: (alloc-like, retire-like) Block fields bounding the lifetime interval
+    #: used by the batched scan (IBR overrides with birth_epoch)
+    retire_era_fields: Tuple[str, str] = ("alloc_era", "retire_era")
 
     def __init__(self, max_threads: int):
         self.max_threads = max_threads
@@ -70,7 +76,11 @@ class SMRScheme:
         self.alloc_count: List[int] = [0] * max_threads
         self.free_count: List[int] = [0] * max_threads
         self.retire_count: List[int] = [0] * max_threads
-        self.retire_lists: List[List[Block]] = [[] for _ in range(max_threads)]
+        # list-compatible, but additionally keeps packed int32 era columns
+        # in lock-step for the batched reclamation scan (era_table.py)
+        self.retire_lists: List[ArrayRetireList] = [
+            ArrayRetireList(self.retire_era_fields) for _ in range(max_threads)
+        ]
 
     # -- thread management -------------------------------------------------
     def register_thread(self) -> int:
@@ -126,6 +136,107 @@ class SMRScheme:
 
     def flush(self, tid: int) -> None:
         """Best-effort cleanup of this thread's retire list (benchmark drain)."""
+
+    # -- batched reclamation (era_table.py) ----------------------------------
+    #: True when the scheme publishes reservation intervals for the scan
+    supports_batched_cleanup: bool = False
+
+    def _reservation_phases(self):
+        """Ordered (lo, hi) reservation snapshots the batched scan must check.
+
+        Each phase is a flat pair of int32 arrays (see era_table): a block is
+        deletable iff it conflicts with no interval in ANY phase.  Schemes
+        whose scan order carries a proof obligation (WFE's Lemmas 4/5)
+        override :meth:`_batched_mask` instead.  ``None`` = no batched path.
+        """
+        return None
+
+    def _batched_mask(self, alloc: np.ndarray, retire: np.ndarray,
+                      backend: str, **backend_kwargs) -> Optional[np.ndarray]:
+        """Deletable mask for arbitrary lifetime arrays (any thread's, or a
+        concatenation of several threads' — the scan is reader-agnostic)."""
+        phases = self._reservation_phases()
+        if phases is None:
+            return None
+        mask: Optional[np.ndarray] = None
+        for lo, hi in phases:
+            m = batched_can_delete(alloc, retire, lo, hi, backend,
+                                   **backend_kwargs)
+            mask = m if mask is None else (mask & m)
+        return mask
+
+    def deletable_mask(self, tid: int, backend: str = "numpy",
+                       **backend_kwargs) -> Optional[np.ndarray]:
+        """(R,) bool deletable mask over this thread's retire list.
+
+        Returns None when the scheme has no batched path (HP, Leak) — the
+        caller should fall back to the scalar ``flush``.
+        """
+        alloc, retire = self.retire_lists[tid].arrays()
+        return self._batched_mask(alloc, retire, backend, **backend_kwargs)
+
+    def cleanup_batch(self, tid: int, backend: str = "numpy",
+                      **backend_kwargs) -> int:
+        """Vectorized drain of this thread's retire list.  Returns #freed.
+
+        One batched interval scan replaces the per-block O(T·H) Python loop;
+        ``backend`` selects scalar (reference) / numpy / pallas.  Falls back
+        to the scalar ``flush`` for schemes without era intervals.
+        """
+        rl = self.retire_lists[tid]
+        if len(rl) == 0:
+            return 0
+        if not self.supports_batched_cleanup:
+            # scalar fallback OUTSIDE the list lock: flush() routes to the
+            # scheme's own cleanup, which takes the lock itself
+            before = self.free_count[tid]
+            self.flush(tid)
+            return self.free_count[tid] - before
+        with rl.lock:
+            mask = self.deletable_mask(tid, backend, **backend_kwargs)
+            return rl.compact(mask, lambda blk: self.free(blk, tid))
+
+    def cleanup_batch_all(self, backend: str = "numpy",
+                          **backend_kwargs) -> int:
+        """Fused drain: every thread's retire list in ONE batched scan.
+
+        Concatenates all lifetime arrays so each reservation phase is
+        snapshotted once for the whole fleet instead of once per thread.
+        List locks are held only for the per-list snapshot and compact —
+        never across the scan itself — so a fleet drain cannot stall
+        retiring threads for the duration of a (possibly kernel-compiling)
+        mask computation.  Safety: each compact is applied only if the
+        list's ``version`` is unchanged since its snapshot (a competing
+        cleanup reordered it → skip, that cleaner already did the work);
+        appends don't bump the version — they land past the snapshotted
+        prefix and ``compact`` preserves them.
+        """
+        if not self.supports_batched_cleanup:
+            freed = 0
+            for tid in range(self.max_threads):
+                before = self.free_count[tid]
+                self.flush(tid)
+                freed += self.free_count[tid] - before
+            return freed
+        lists = self.retire_lists
+        snaps = [lst.snapshot() for lst in lists]
+        sizes = [s[1] for s in snaps]
+        if sum(sizes) == 0:
+            return 0
+        alloc = np.concatenate([s[2] for s in snaps])
+        retire = np.concatenate([s[3] for s in snaps])
+        mask = self._batched_mask(alloc, retire, backend, **backend_kwargs)
+        freed = 0
+        off = 0
+        for tid, (lst, (version, n, _, _)) in enumerate(zip(lists, snaps)):
+            if n:
+                with lst.lock:
+                    if lst.version == version:
+                        freed += lst.compact(
+                            mask[off:off + n],
+                            lambda blk, t=tid: self.free(blk, t))
+            off += n
+        return freed
 
     # -- metrics -------------------------------------------------------------
     def unreclaimed(self) -> int:

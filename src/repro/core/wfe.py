@@ -24,7 +24,10 @@ from __future__ import annotations
 
 from typing import Any, List, Optional, Tuple, Type
 
+import numpy as np
+
 from .atomics import INF_ERA, INVPTR, AtomicInt, AtomicPair, AtomicRef
+from .era_table import EraTable, batched_can_delete
 from .smr_base import Block, SMRScheme
 
 __all__ = ["WFE"]
@@ -47,6 +50,7 @@ class WFE(SMRScheme):
     name = "WFE"
     wait_free = True
     bounded_memory = True
+    supports_batched_cleanup = True
 
     def __init__(
         self,
@@ -66,10 +70,14 @@ class WFE(SMRScheme):
         self.global_era = AtomicInt(1)
         self.counter_start = AtomicInt(0)
         self.counter_end = AtomicInt(0)
-        # (era, tag) pairs; two extra special slots per thread.
+        # (era, tag) pairs; two extra special slots per thread.  The era
+        # component of every pair write-throughs into the era table, so the
+        # batched cleanup scans one contiguous (T, H+2) int32 array.
+        self.era_table = EraTable(max_threads, max_hes + 2)
         self.reservations: List[List[AtomicPair]] = [
-            [AtomicPair((INF_ERA, 0)) for _ in range(max_hes + 2)]
-            for _ in range(max_threads)
+            [AtomicPair((INF_ERA, 0), mirror_a=self.era_table.mirror_lo(i, j))
+             for j in range(max_hes + 2)]
+            for i in range(max_threads)
         ]
         self.state: List[List[_StateCell]] = [
             [_StateCell() for _ in range(max_hes)] for _ in range(max_threads)
@@ -213,21 +221,46 @@ class WFE(SMRScheme):
     def cleanup(self, tid: int) -> None:
         remaining: List[Block] = []
         mh = self.max_hes
-        for blk in self.retire_lists[tid]:
-            ce = self.counter_end.load()
-            # Normal reservations first, then special-1 (Lemma 4's order).
-            if not (self.can_delete(blk, 0, mh) and self.can_delete(blk, mh, mh + 1)):
-                remaining.append(blk)
-                continue
-            # If any slow path was active, check special-2 then re-check the
-            # normal reservations (Lemma 5's opposite order).
-            if ce == self.counter_start.load() or (
-                self.can_delete(blk, mh + 1, mh + 2) and self.can_delete(blk, 0, mh)
-            ):
-                self.free(blk, tid)
-            else:
-                remaining.append(blk)
-        self.retire_lists[tid][:] = remaining
+        with self.retire_lists[tid].lock:  # exclude concurrent batched drains
+            for blk in self.retire_lists[tid]:
+                ce = self.counter_end.load()
+                # Normal reservations first, then special-1 (Lemma 4's order).
+                if not (self.can_delete(blk, 0, mh) and self.can_delete(blk, mh, mh + 1)):
+                    remaining.append(blk)
+                    continue
+                # If any slow path was active, check special-2 then re-check the
+                # normal reservations (Lemma 5's opposite order).
+                if ce == self.counter_start.load() or (
+                    self.can_delete(blk, mh + 1, mh + 2) and self.can_delete(blk, 0, mh)
+                ):
+                    self.free(blk, tid)
+                else:
+                    remaining.append(blk)
+            self.retire_lists[tid][:] = remaining
+
+    def _batched_mask(self, alloc: np.ndarray, retire: np.ndarray,
+                      backend: str, **backend_kwargs) -> np.ndarray:
+        """Batched can_delete with the Theorem-4 two-phase scan order.
+
+        Scan the normal reservation columns, then special-1 (Lemma 4's
+        order); if any slow path was in flight, additionally scan special-2
+        and RE-snapshot the normal columns (Lemma 5's opposite order).  Each
+        ``snapshot()`` re-reads the live mirror, preserving the scalar
+        cleanup's happens-before structure — only the per-block Python loop
+        is replaced by one vectorized scan over the whole retire list.
+        """
+        if len(alloc) == 0:
+            return np.zeros(0, bool)
+        mh = self.max_hes
+        scan = lambda js, je: batched_can_delete(  # noqa: E731
+            alloc, retire, *self.era_table.snapshot(js, je),
+            backend, **backend_kwargs)
+        ce = self.counter_end.load()
+        ok = scan(0, mh) & scan(mh, mh + 1)
+        if ce != self.counter_start.load():
+            ok &= scan(mh + 1, mh + 2)
+            ok &= scan(0, mh)
+        return ok
 
     def transfer(self, src: int, dst: int, tid: int) -> None:
         # Copy the era only; each slot keeps its own slow-path cycle tag.

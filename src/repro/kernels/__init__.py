@@ -7,6 +7,8 @@ Each kernel ships with a pure-jnp oracle in ``ref.py``; ``ops.py`` is the
 public jit'd entry point with a kernel/reference selector.
 """
 
-from .ops import can_delete_blocks, paged_decode_attention
+from .ops import (can_delete_blocks, can_delete_blocks_interval,
+                  paged_decode_attention)
 
-__all__ = ["can_delete_blocks", "paged_decode_attention"]
+__all__ = ["can_delete_blocks", "can_delete_blocks_interval",
+           "paged_decode_attention"]

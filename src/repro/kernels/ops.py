@@ -12,15 +12,16 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .era_scan import era_scan
+from .era_scan import era_scan, era_scan_interval
 from .paged_attention import paged_attention
 
-__all__ = ["can_delete_blocks", "paged_decode_attention"]
+__all__ = ["can_delete_blocks", "can_delete_blocks_interval",
+           "paged_decode_attention"]
 
 
 def can_delete_blocks(alloc_eras, retire_eras, reservations, *,
                       use_kernel: bool = False,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = True) -> jax.Array:
     """Vectorized WFE can_delete over R retired blocks.  Returns (R,) bool."""
     alloc_eras = jnp.asarray(alloc_eras, jnp.int32)
     retire_eras = jnp.asarray(retire_eras, jnp.int32)
@@ -29,6 +30,21 @@ def can_delete_blocks(alloc_eras, retire_eras, reservations, *,
         return era_scan(alloc_eras, retire_eras, reservations,
                         interpret=interpret)
     return ref.era_scan_ref(alloc_eras, retire_eras, reservations)
+
+
+def can_delete_blocks_interval(alloc_eras, retire_eras, res_lo, res_hi, *,
+                               interpret: bool | None = None) -> jax.Array:
+    """Generalized interval form used by ``core.era_table``'s pallas backend.
+
+    Always takes the Pallas kernel (``interpret=None`` auto-selects compiled
+    vs interpreter by backend); the jnp oracle lives in ``ref``.
+    """
+    return era_scan_interval(
+        jnp.asarray(alloc_eras, jnp.int32),
+        jnp.asarray(retire_eras, jnp.int32),
+        jnp.asarray(res_lo, jnp.int32),
+        jnp.asarray(res_hi, jnp.int32),
+        interpret=interpret)
 
 
 def paged_decode_attention(q, k_pool, v_pool, tables, lengths, *,

@@ -18,21 +18,28 @@ INF_ERA32 = jnp.iinfo(jnp.int32).max
 
 
 # ----------------------------------------------------------------- era_scan
-def era_scan_ref(alloc_eras: jax.Array, retire_eras: jax.Array,
-                 reservations: jax.Array) -> jax.Array:
-    """WFE cleanup() interval scan — the reclamation hot path (paper Fig. 4).
+def era_scan_interval_ref(alloc_eras: jax.Array, retire_eras: jax.Array,
+                          res_lo: jax.Array, res_hi: jax.Array) -> jax.Array:
+    """Generalized cleanup scan: block lifetimes vs reservation intervals.
 
     alloc_eras, retire_eras: (R,) int32 — lifetimes of retired blocks.
-    reservations: (T, H) int32 era components (INF_ERA32 = empty slot).
-    Returns (R,) bool: True iff no reservation overlaps the block's lifetime,
-    i.e. the paper's ``can_delete(blk, 0, H)`` vectorized over blocks.
+    res_lo, res_hi: (S,) int32 reservation interval bounds (lo == INF_ERA32
+    marks an empty slot; point reservations pass lo == hi).
+    Returns (R,) bool: True iff no valid reservation interval overlaps the
+    block's lifetime — ``can_delete`` vectorized over blocks and schemes.
     """
-    res = reservations.reshape(-1)  # (T*H,)
-    valid = res != INF_ERA32
-    conflict = ((alloc_eras[:, None] <= res[None, :])
-                & (res[None, :] <= retire_eras[:, None])
+    valid = res_lo != INF_ERA32
+    conflict = ((res_lo[None, :] <= retire_eras[:, None])
+                & (alloc_eras[:, None] <= res_hi[None, :])
                 & valid[None, :])
     return ~jnp.any(conflict, axis=1)
+
+
+def era_scan_ref(alloc_eras: jax.Array, retire_eras: jax.Array,
+                 reservations: jax.Array) -> jax.Array:
+    """WFE cleanup() point-era scan (paper Fig. 4): lo == hi == era."""
+    res = reservations.reshape(-1)  # (T*H,)
+    return era_scan_interval_ref(alloc_eras, retire_eras, res, res)
 
 
 # ----------------------------------------------------- paged decode attention

@@ -11,6 +11,14 @@ The full adaptation loop (DESIGN.md §2.1(A)):
 Greedy sampling; the device step runs synchronously on CPU here, with an
 optional ``inflight_depth`` that keeps several protected steps outstanding
 to exercise the multi-reservation path the way an async TPU runtime would.
+
+``use_kernel=True`` accelerates BOTH compute paths: paged decode attention
+takes the Pallas kernel AND reclamation takes the Pallas ``era_scan``
+backend of ``cleanup_batch`` (``cleanup_backend="pallas"``); otherwise the
+NumPy backend vectorizes the scan.  ``run()`` additionally drains every
+thread's retire list with one fused cross-thread scan (``cleanup_all``) on
+idle ticks and at shutdown, so blocks retired by other worker threads are
+reclaimed even when those threads stop ticking.
 """
 
 from __future__ import annotations
@@ -33,13 +41,16 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, n_blocks: int = 64,
                  block_size: int = 8, max_batch: int = 8,
                  scheme: str = "WFE", use_kernel: bool = False,
+                 cleanup_backend: str = "numpy",
                  max_threads: int = 8, **smr_kwargs):
         self.cfg = cfg
         self.params = params
         self.block_size = block_size
         self.use_kernel = use_kernel
         self.pool = BlockPool(n_blocks, scheme=scheme,
-                              max_threads=max_threads, **smr_kwargs)
+                              max_threads=max_threads,
+                              cleanup_backend=cleanup_backend,
+                              use_kernel=use_kernel, **smr_kwargs)
         self.sched = Scheduler(self.pool, block_size=block_size,
                                max_batch=max_batch)
         self.pools = init_pools(cfg, n_blocks, block_size)
@@ -72,8 +83,15 @@ class ServeEngine:
                     empty = not self.sched.queue
                 if empty and not self.sched.active:
                     break
+                # idle tick: fused cross-thread drain — reclaim blocks
+                # retired by workers that are stalled or done ticking
+                self.pool.cleanup_all()
             steps += 1
-        # final drain of this thread's retire list
+        # final drain: every thread's retire list in one batched scan per
+        # round (era advances between rounds unblock epoch-style schemes)
         for _ in range(64):
+            if self.pool.cleanup_all() == 0 and \
+                    self.pool.smr.unreclaimed() == 0:
+                break
             self.pool.cleanup(tid)
         return dict(self.sched.stats)

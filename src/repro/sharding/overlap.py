@@ -30,6 +30,13 @@ except ImportError:  # pragma: no cover
 __all__ = ["ag_matmul", "rs_matmul", "shard_map"]
 
 
+def _axis_size(axis_name: str) -> int:
+    """jax.lax.axis_size appeared after 0.4.x; psum(1) is the portable form."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
 def ag_matmul(x_shard: jax.Array, w_shard: jax.Array, axis_name: str
               ) -> jax.Array:
     """Overlapped all_gather(x) @ w, inside shard_map.
@@ -40,7 +47,7 @@ def ag_matmul(x_shard: jax.Array, w_shard: jax.Array, axis_name: str
     but computed as k chunk-matmuls pipelined with k-1 collective_permutes
     so the ICI transfer of chunk i+1 hides under the matmul of chunk i.
     """
-    k = jax.lax.axis_size(axis_name)
+    k = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % k) for i in range(k)]
 
@@ -78,7 +85,7 @@ def rs_matmul(x: jax.Array, w_shard: jax.Array, axis_name: str) -> jax.Array:
     Returns (m/k, p): the reduce_scatter of the full (m, p) partial sums,
     decomposed into k-1 permute+add steps overlapped with chunk matmuls.
     """
-    k = jax.lax.axis_size(axis_name)
+    k = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     m = x.shape[0]
     assert m % k == 0, (m, k)

@@ -1,0 +1,318 @@
+"""Batched-reclamation backend equivalence (core/era_table.py).
+
+The tentpole invariant: the scalar (reference), NumPy, and Pallas
+``cleanup_batch`` backends must return BIT-IDENTICAL deletable masks on any
+input — randomized era intervals, INF_ERA (empty) reservations, and WFE's
+two special helper slots included.  Seeded-numpy randomization keeps these
+running even without hypothesis installed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import make_scheme
+from repro.core.atomics import INF_ERA, MIRROR_INF, AtomicRef, PtrView
+from repro.core.era_table import (ArrayRetireList, EraTable,
+                                  batched_can_delete)
+from repro.core.smr_base import Block
+
+BACKENDS = ("scalar", "numpy", "pallas")
+
+
+class _Node(Block):
+    __slots__ = ("v",)
+
+    def __init__(self, v=0):
+        super().__init__()
+        self.v = v
+
+    def _poison_payload(self):
+        self.v = None
+
+
+# ------------------------------------------------- raw backend dispatch
+@pytest.mark.parametrize("seed", range(8))
+def test_backends_identical_on_random_intervals(seed):
+    """scalar == numpy == pallas on randomized lifetimes/reservations."""
+    rng = np.random.default_rng(seed)
+    r = int(rng.integers(1, 400))
+    s = int(rng.integers(1, 700))
+    alloc = rng.integers(0, 120, r).astype(np.int32)
+    retire = (alloc + rng.integers(0, 60, r)).astype(np.int32)
+    lo = rng.integers(0, 200, s).astype(np.int32)
+    # mix of point reservations (hi == lo) and true intervals
+    hi = np.where(rng.random(s) < 0.5, lo,
+                  lo + rng.integers(0, 40, s)).astype(np.int32)
+    # ~40% empty slots (the INF_ERA case)
+    lo[rng.random(s) < 0.4] = MIRROR_INF
+    masks = [batched_can_delete(alloc, retire, lo, hi, backend=b)
+             for b in BACKENDS]
+    for b, m in zip(BACKENDS[1:], masks[1:]):
+        np.testing.assert_array_equal(masks[0], m, err_msg=b)
+
+
+def test_backends_identical_boundary_eras():
+    """Boundary overlap (alloc == era == retire) must block deletion in all
+    backends; adjacent-but-outside eras must not."""
+    alloc = np.array([5, 5, 5, 5], np.int32)
+    retire = np.array([10, 10, 10, 10], np.int32)
+    for era, deletable in [(5, False), (10, False), (4, True), (11, True),
+                           (MIRROR_INF, True)]:
+        lo = np.array([era], np.int32)
+        for b in BACKENDS:
+            got = batched_can_delete(alloc, retire, lo, lo, backend=b)
+            assert bool(got.all()) == deletable, (b, era)
+
+
+# ------------------------------------------------- scheme-level masks
+def _random_history(smr, rng, n_ops=160, n_threads=3, n_cells=2):
+    """Drive a scheme through a random single-threaded-legal history,
+    leaving a populated retire list and live reservations behind."""
+    tids = [smr.register_thread() for _ in range(n_threads)]
+    cells = [AtomicRef(None) for _ in range(n_cells)]
+    views = [PtrView(c) for c in cells]
+    for _ in range(n_ops):
+        t = tids[int(rng.integers(n_threads))]
+        c = int(rng.integers(n_cells))
+        op = rng.random()
+        if op < 0.35:
+            smr.start_op(t)
+            blk = smr.alloc_block(_Node, t, 1)
+            cells[c].store(blk)
+        elif op < 0.6:
+            smr.start_op(t)
+            if cells[c].load() is not None:
+                smr.get_protected(views[c], c % getattr(smr, "max_hes", 1), t)
+        elif op < 0.85:
+            blk = cells[c].load()
+            if blk is not None:
+                cells[c].store(None)
+                smr.retire(blk, t)
+        else:
+            smr.end_op(t)
+    return tids
+
+
+@pytest.mark.parametrize("scheme", ["WFE", "HE", "2GEIBR", "EBR"])
+@pytest.mark.parametrize("seed", range(4))
+def test_scheme_masks_identical_across_backends(scheme, seed):
+    """deletable_mask is bit-identical across backends after random runs
+    (live reservations, INF slots, and mixed retire lists)."""
+    kw = ({"era_freq": 3, "cleanup_freq": 10 ** 9} if scheme in ("WFE", "HE")
+          else {"epoch_freq": 3, "cleanup_freq": 10 ** 9})
+    smr = make_scheme(scheme, max_threads=3, **kw)
+    # zlib.crc32 is stable across processes (hash() is salted per run)
+    import zlib
+    rng = np.random.default_rng(1000 * seed + zlib.crc32(scheme.encode()))
+    tids = _random_history(smr, rng)
+    for tid in tids:
+        masks = [smr.deletable_mask(tid, b) for b in BACKENDS]
+        for b, m in zip(BACKENDS[1:], masks[1:]):
+            np.testing.assert_array_equal(masks[0], m,
+                                          err_msg=f"{scheme}/{b}/tid{tid}")
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_wfe_special_slots_equivalent_across_backends(seed):
+    """WFE with the slow path forced: the special helper slots (Lemmas 4/5)
+    participate in the batched scan identically in every backend."""
+    smr = make_scheme("WFE", max_threads=3, era_freq=1,
+                      cleanup_freq=10 ** 9, max_attempts=1)
+    rng = np.random.default_rng(seed)
+    tids = _random_history(smr, rng, n_ops=120)
+    assert sum(smr.slow_path_count) > 0  # the stress mode really engaged
+    for tid in tids:
+        masks = [smr.deletable_mask(tid, b) for b in BACKENDS]
+        for b, m in zip(BACKENDS[1:], masks[1:]):
+            np.testing.assert_array_equal(masks[0], m, err_msg=b)
+    # manually pin via a special slot: all backends must refuse deletion
+    t0 = tids[0]
+    blk = smr.alloc_block(_Node, t0, 1)
+    smr.reservations[t0][smr.max_hes].store_a(blk.alloc_era)
+    smr.retire(blk, t0)
+    for b in BACKENDS:
+        assert not smr.deletable_mask(t0, b)[-1], b
+    smr.reservations[t0][smr.max_hes].store_a(INF_ERA)
+
+
+# ------------------------------------------------- batched vs scalar flush
+@pytest.mark.parametrize("scheme", ["WFE", "HE", "2GEIBR"])
+def test_cleanup_batch_frees_exactly_what_flush_would(scheme):
+    """With quiescent reservations, cleanup_batch drains everything the
+    scalar flush would (and nothing a live reservation pins)."""
+    kw = ({"era_freq": 1, "cleanup_freq": 10 ** 9} if scheme in ("WFE", "HE")
+          else {"epoch_freq": 1, "cleanup_freq": 10 ** 9})
+    smr = make_scheme(scheme, max_threads=2, **kw)
+    t0 = smr.register_thread()
+    t1 = smr.register_thread()
+    cell = AtomicRef(None)
+    view = PtrView(cell)
+    blks = []
+    for i in range(100):
+        smr.start_op(t0)
+        b = smr.alloc_block(_Node, t0, i)
+        cell.store(b)
+        if i == 50:  # t1 pins the middle of the history
+            smr.start_op(t1)
+            smr.get_protected(view, 0, t1)
+        if blks:
+            smr.retire(blks[-1], t0)
+        blks.append(b)
+    smr.end_op(t0)
+    freed = smr.cleanup_batch(t0, "numpy")
+    assert freed > 0
+    assert not blks[50].freed, "pinned block must survive the batched drain"
+    # release the reader: everything must now drain
+    smr.end_op(t1)
+    smr.cleanup_batch(t0, "pallas")
+    assert smr.unreclaimed() <= 1  # the never-retired tail block
+    # no double frees, no lost frees
+    assert sum(smr.free_count) <= sum(smr.retire_count)
+
+
+# ------------------------------------------------- cross-thread drain
+def test_cleanup_batch_all_fused_drain():
+    """One fused scan drains every thread's list; per-list attribution of
+    frees stays with the owning tid."""
+    smr = make_scheme("WFE", max_threads=4, era_freq=1, cleanup_freq=10 ** 9)
+    tids = [smr.register_thread() for _ in range(3)]
+    for tid in tids:
+        for i in range(40):
+            blk = smr.alloc_block(_Node, tid, i)
+            smr.retire(blk, tid)
+    total = smr.unreclaimed()
+    assert total > 100  # cleanup_freq is huge; only retire-0's scalar pass ran
+    freed = smr.cleanup_batch_all("numpy")
+    assert freed == total
+    assert smr.unreclaimed() == 0
+    for tid in tids:
+        assert smr.free_count[tid] == 40  # frees credited to the owner
+
+
+def test_cleanup_all_races_owner_cleanup():
+    """Concurrent fleet drains + owner retires/cleanups: no double free
+    (the Block shim asserts), no lost blocks, everything reclaimed."""
+    import threading
+
+    from repro.blocks import BlockPool
+
+    pool = BlockPool(256, max_threads=4, era_freq=1, cleanup_freq=2,
+                     vectorized_threshold=1)
+    stop = threading.Event()
+    errors = []
+
+    def churn():
+        tid = pool.register_thread()
+        try:
+            for _ in range(200):
+                blks = [pool.alloc(tid) for _ in range(4)]
+                for b in blks:
+                    pool.retire(b, tid)
+                pool.cleanup(tid)
+            for _ in range(16):
+                pool.cleanup(tid)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+        finally:
+            stop.set()
+
+    def drainer():
+        pool.register_thread()
+        try:
+            while not stop.is_set():
+                pool.cleanup_all()
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=churn),
+          threading.Thread(target=drainer)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=120)
+    assert not errors, errors[0] if errors else None
+    for _ in range(8):
+        pool.cleanup_all()
+    assert pool.free_blocks == 256, "drain lost or leaked blocks"
+    s = pool.stats()
+    assert s["frees"] == s["retires"]
+
+
+# ------------------------------------------------- era-table plumbing
+def test_array_retire_list_tracks_blocks():
+    rl = ArrayRetireList(capacity=2)
+    blks = []
+    for i in range(9):
+        b = _Node(i)
+        b.alloc_era, b.retire_era = i, i + 3
+        rl.append(b)
+        blks.append(b)
+    alloc, retire = rl.arrays()
+    np.testing.assert_array_equal(alloc, np.arange(9))
+    np.testing.assert_array_equal(retire, np.arange(9) + 3)
+    # full-slice rebuild (the scalar cleanup's lst[:] = remaining)
+    rl[:] = blks[::2]
+    alloc, retire = rl.arrays()
+    np.testing.assert_array_equal(alloc, np.arange(0, 9, 2))
+    # compact with a mask
+    freed = rl.compact(np.array([True, False, True, False, True]),
+                       lambda b: None)
+    assert freed == 3 and len(rl) == 2
+    alloc, _ = rl.arrays()
+    np.testing.assert_array_equal(alloc, [2, 6])
+
+
+def test_array_retire_list_snapshot_version_protocol():
+    """The fused drain's protocol: appends after a snapshot are preserved
+    by compact; a competing compact bumps version so a stale mask is
+    detectably invalid."""
+    rl = ArrayRetireList()
+    blks = []
+    for i in range(6):
+        b = _Node(i)
+        b.alloc_era, b.retire_era = i, i + 1
+        rl.append(b)
+        blks.append(b)
+    version, n, alloc, retire = rl.snapshot()
+    assert n == 6 and list(alloc) == list(range(6))
+    # two appends AFTER the snapshot (owner retiring during the drain scan)
+    for i in (6, 7):
+        b = _Node(i)
+        b.alloc_era, b.retire_era = i, i + 1
+        rl.append(b)
+    assert rl.version == version  # appends don't invalidate the snapshot
+    freed = rl.compact(np.array([True] * 6), lambda b: None)
+    assert freed == 6 and len(rl) == 2
+    a, r = rl.arrays()
+    np.testing.assert_array_equal(a, [6, 7])  # tail preserved, arrays synced
+    assert rl.version != version  # compact invalidates older snapshots
+
+
+def test_era_table_mirror_stays_in_sync():
+    """Reservation writes through the atomics land in the mirror under the
+    same lock, INF_ERA included."""
+    smr = make_scheme("HE", max_threads=2, era_freq=1, cleanup_freq=1)
+    t0 = smr.register_thread()
+    smr.reservations[t0][0].store(7)
+    assert smr.era_table.lo[t0, 0] == 7
+    smr.reservations[t0][0].store(INF_ERA)
+    assert smr.era_table.lo[t0, 0] == MIRROR_INF
+    # WFE pairs mirror the era component only; tags don't disturb it
+    wfe = make_scheme("WFE", max_threads=2, era_freq=1, cleanup_freq=1)
+    t0 = wfe.register_thread()
+    wfe.reservations[t0][0].store_a(9)
+    wfe.reservations[t0][0].store_b(123)
+    assert wfe.era_table.lo[t0, 0] == 9
+    assert wfe.reservations[t0][0].load() == (9, 123)
+
+
+def test_era_table_interval_snapshot():
+    et = EraTable(2, 3, interval=True)
+    et.lo[0, 1] = 4
+    et.hi[0, 1] = 9
+    lo, hi = et.snapshot()
+    assert lo[1] == 4 and hi[1] == 9
+    assert lo[0] == MIRROR_INF
+    # snapshots are copies, not views
+    et.lo[0, 1] = 5
+    assert lo[1] == 4

@@ -6,7 +6,11 @@ catches structural bugs the throughput benchmarks would hide.
 """
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import make_scheme
 from repro.core.datastructures import (CRTurnQueue, HarrisMichaelList,

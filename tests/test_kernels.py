@@ -10,7 +10,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dep: only the property test below needs it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ref
 from repro.kernels.era_scan import INF_ERA32, era_scan
@@ -49,24 +54,30 @@ def test_era_scan_matches_ref_shapes(r, t, h):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.data())
-def test_era_scan_property_vs_scalar(data):
-    r = data.draw(st.integers(1, 40))
-    t = data.draw(st.integers(1, 8))
-    h = data.draw(st.integers(1, 6))
-    alloc = np.array(data.draw(st.lists(
-        st.integers(0, 30), min_size=r, max_size=r)), np.int32)
-    retire = alloc + np.array(data.draw(st.lists(
-        st.integers(0, 10), min_size=r, max_size=r)), np.int32)
-    res = np.array(data.draw(st.lists(
-        st.lists(st.one_of(st.integers(0, 40), st.just(INF_ERA32)),
-                 min_size=h, max_size=h),
-        min_size=t, max_size=t)), np.int32)
-    got = np.asarray(era_scan(jnp.asarray(alloc), jnp.asarray(retire),
-                              jnp.asarray(res), interpret=True))
-    want = _scalar_can_delete(alloc, retire, res)
-    np.testing.assert_array_equal(got, want)
+if not HAVE_HYPOTHESIS:
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(pip install -r requirements-dev.txt)")
+    def test_era_scan_property_vs_scalar():
+        pass
+else:
+    @settings(max_examples=50, deadline=None)
+    @given(st.data())
+    def test_era_scan_property_vs_scalar(data):
+        r = data.draw(st.integers(1, 40))
+        t = data.draw(st.integers(1, 8))
+        h = data.draw(st.integers(1, 6))
+        alloc = np.array(data.draw(st.lists(
+            st.integers(0, 30), min_size=r, max_size=r)), np.int32)
+        retire = alloc + np.array(data.draw(st.lists(
+            st.integers(0, 10), min_size=r, max_size=r)), np.int32)
+        res = np.array(data.draw(st.lists(
+            st.lists(st.one_of(st.integers(0, 40), st.just(INF_ERA32)),
+                     min_size=h, max_size=h),
+            min_size=t, max_size=t)), np.int32)
+        got = np.asarray(era_scan(jnp.asarray(alloc), jnp.asarray(retire),
+                                  jnp.asarray(res), interpret=True))
+        want = _scalar_can_delete(alloc, retire, res)
+        np.testing.assert_array_equal(got, want)
 
 
 def test_era_scan_never_frees_protected():

@@ -7,7 +7,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dep: only the property test below needs it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.launch.hlo_analysis import HloModule, analyze
@@ -35,37 +40,42 @@ def test_logical_to_spec_basics():
 NAMES = sorted(DEFAULT_RULES)
 
 
-@settings(max_examples=80, deadline=None)
-@given(st.data())
-def test_logical_to_spec_properties(data):
-    """(1) assigned axes always divide the dim; (2) no mesh axis reused;
-    (3) unknown/empty-rule names are never sharded."""
-    from jax.sharding import Mesh as M
+if not HAVE_HYPOTHESIS:
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(pip install -r requirements-dev.txt)")
+    def test_logical_to_spec_properties():
+        pass
+else:
+    @settings(max_examples=80, deadline=None)
+    @given(st.data())
+    def test_logical_to_spec_properties(data):
+        """(1) assigned axes always divide the dim; (2) no mesh axis reused;
+        (3) unknown/empty-rule names are never sharded."""
 
-    class FakeMesh:  # shape-only stand-in (logical_to_spec reads .shape)
-        def __init__(self, shape):
-            self.shape = shape
+        class FakeMesh:  # shape-only stand-in (logical_to_spec reads .shape)
+            def __init__(self, shape):
+                self.shape = shape
 
-    d = data.draw(st.sampled_from([2, 4, 16]))
-    m = data.draw(st.sampled_from([2, 8, 16]))
-    mesh = FakeMesh({"data": d, "model": m})
-    ndim = data.draw(st.integers(1, 4))
-    names = tuple(data.draw(st.sampled_from(NAMES + ["nonexistent", None]))
-                  for _ in range(ndim))
-    shape = tuple(data.draw(st.sampled_from([1, 3, 8, 16, 24, 160, 256]))
-                  for _ in range(ndim))
-    spec = logical_to_spec(names, shape, mesh)
-    used = []
-    for entry, dim in zip(tuple(spec) + (None,) * ndim, shape):
-        if entry is None:
-            continue
-        axes = entry if isinstance(entry, tuple) else (entry,)
-        size = 1
-        for a in axes:
-            size *= mesh.shape[a]
-            used.append(a)
-        assert dim % size == 0, (names, shape, spec)
-    assert len(used) == len(set(used)), f"mesh axis reused: {spec}"
+        d = data.draw(st.sampled_from([2, 4, 16]))
+        m = data.draw(st.sampled_from([2, 8, 16]))
+        mesh = FakeMesh({"data": d, "model": m})
+        ndim = data.draw(st.integers(1, 4))
+        names = tuple(data.draw(st.sampled_from(NAMES + ["nonexistent", None]))
+                      for _ in range(ndim))
+        shape = tuple(data.draw(st.sampled_from([1, 3, 8, 16, 24, 160, 256]))
+                      for _ in range(ndim))
+        spec = logical_to_spec(names, shape, mesh)
+        used = []
+        for entry, dim in zip(tuple(spec) + (None,) * ndim, shape):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+                used.append(a)
+            assert dim % size == 0, (names, shape, spec)
+        assert len(used) == len(set(used)), f"mesh axis reused: {spec}"
 
 
 def test_zero_shard_spec():

@@ -17,7 +17,11 @@ history — so the invariants must hold on all of them:
 """
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import SCHEMES, make_scheme
 from repro.core.atomics import AtomicRef, PtrView
