@@ -1,27 +1,65 @@
 """Serving-engine benchmark: WFE pool vs other SMR schemes under the
 continuous-batching engine (the paper's technique in its integrated home).
 
-Measures scheduler-side tail latencies of tick() (admission+alloc+protect)
-— the operations the paper makes wait-free — plus end-to-end tokens/s of
-the engine on a reduced dense model.
+Two modes:
+
+* ``run()`` — the original single-worker scheme comparison: scheduler-side
+  tail latencies of tick() (admission+alloc+protect) — the operations the
+  paper makes wait-free — plus end-to-end tokens/s on a reduced dense model.
+* ``run_scaling()`` / CLI — the sharded multi-worker matrix: throughput for
+  workers x shards x scheme, with speedup over the single-worker
+  single-shard baseline.  This is the configuration the sharded runtime
+  exists for: K worker threads pipelining device steps over N per-shard SMR
+  instances joined by the distributed era clock.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --workers 4 --shards 4
 """
 
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
+
+if __name__ == "__main__":
+    # Scaling mode (script invocation only — importing benchmarks.run keeps
+    # the ambient XLA config): one XLA compute thread per step, so decode
+    # parallelism comes from the shard chains — the per-device picture of a
+    # production host, measurable on a 2-vCPU CI box.
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_cpu_multi_thread_eigen=false"
+                               " intra_op_parallelism_threads=1")
 
 import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import ServeEngine, ServeRuntime
+
+
+def _build_base(arch: str = "stablelm-3b"):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, params
+
+
+def _build_bench(arch: str = "stablelm-3b"):
+    """Scaled-up smoke model for the scaling matrix: the device step must
+    cost more than the Python scheduling around it, or the measurement
+    reads the interpreter, not the runtime."""
+    cfg = get_smoke_config(arch).scaled(
+        n_layers=4, d_model=256, n_heads=8, n_kv_heads=8, d_ff=768,
+        vocab_size=512)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, params
 
 
 def run(n_requests: int = 12, new_tokens: int = 8):
-    cfg = get_smoke_config("stablelm-3b")
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0))
+    cfg, params = _build_base()
     out = {}
     print("\n### Serving engine: scheduler-op latency + throughput by scheme")
     print(f"{'scheme':>8s} {'tok/s':>8s} {'tick p50 us':>12s} "
@@ -53,10 +91,9 @@ def run(n_requests: int = 12, new_tokens: int = 8):
             engine.sched.complete(plan, sampled, tid)
             tokens += len(plan.requests)
         dt = time.perf_counter() - t0
-        for _ in range(32):
-            engine.pool.cleanup(tid)
+        engine.drain(tid)
         ticks_us = np.array(tick_times) * 1e6
-        stats = engine.pool.smr.stats()
+        stats = engine.pool.stats()
         row = {
             "tok_s": tokens / dt,
             "tick_p50_us": float(np.percentile(ticks_us, 50)),
@@ -71,5 +108,125 @@ def run(n_requests: int = 12, new_tokens: int = 8):
     return out
 
 
+# ------------------------------------------------------------- scaling matrix
+class _Cell:
+    """One (scheme, workers, shards) engine + its runtime, reused per rep."""
+
+    def __init__(self, cfg, params, *, scheme, workers, shards, n_requests,
+                 new_tokens, n_blocks, max_batch, block_size=4):
+        self.workers, self.shards = workers, shards
+        self.n_requests, self.new_tokens = n_requests, new_tokens
+        self.engine = ServeEngine(
+            cfg, params, n_blocks=n_blocks, block_size=block_size,
+            max_batch=max_batch, scheme=scheme, n_shards=shards,
+            max_threads=workers + 2, max_inflight=max(4, 2 * workers),
+            era_freq=16, cleanup_freq=16)
+        self.runtime = ServeRuntime(self.engine, n_workers=workers)
+        self.tok_s: list = []
+        self.last: dict = {}
+
+    def one_pass(self) -> dict:
+        for i in range(self.n_requests):
+            prompt = [1 + (i + j) % 7 for j in range(1 + i % 4)]
+            self.engine.submit(prompt, self.new_tokens)
+        return self.runtime.serve()
+
+    def timed_pass(self) -> None:
+        done_before = self.engine.sched.stats["completed"]
+        stats = self.one_pass()
+        completed = stats["completed"] - done_before  # stats are cumulative
+        self.tok_s.append(completed * self.new_tokens / stats["wall_s"])
+        self.last = stats
+
+    def row(self) -> dict:
+        pool_stats = self.engine.pool.stats()
+        return {
+            "tok_s": float(np.median(self.tok_s)),
+            "tok_s_all": list(self.tok_s),
+            "completed": self.last["completed"],
+            "unreclaimed": self.last["unreclaimed"],
+            "worker_steps": self.last["worker_steps"],
+            "era_spread": pool_stats.get("era_spread", 0),
+            "era_merges": pool_stats.get("era_merges", 0),
+        }
+
+
+def run_scaling(workers: int = 4, shards: int = 4,
+                schemes=("WFE", "HE", "EBR", "2GEIBR"),
+                n_requests: int = 64, new_tokens: int = 16,
+                n_blocks: int = 512, max_batch: int = 8,
+                reps: int = 3, build=_build_bench) -> dict:
+    """Throughput matrix: (1,1) baseline vs (workers, shards) per scheme.
+
+    Reps are INTERLEAVED across configs (A/B/A/B...) and the median is
+    reported: shared-vCPU hosts drift over seconds, so back-to-back
+    per-config timing would fold that drift into the comparison.
+    """
+    cfg, params = build()
+    configs = [(1, 1)]
+    if workers > 1:
+        configs.append((workers, 1))
+    if (workers, shards) not in configs:
+        configs.append((workers, shards))
+    cells = {(sc, w, s): _Cell(cfg, params, scheme=sc, workers=w, shards=s,
+                               n_requests=n_requests, new_tokens=new_tokens,
+                               n_blocks=n_blocks, max_batch=max_batch)
+             for sc in schemes for (w, s) in configs}
+    old_switch = sys.getswitchinterval()
+    sys.setswitchinterval(0.0005)  # ms-scale steps need ms-scale GIL slices
+    try:
+        for cell in cells.values():
+            cell.one_pass()  # warmup: compiles every shape bucket
+        for _ in range(reps):
+            for cell in cells.values():
+                cell.timed_pass()
+    finally:
+        sys.setswitchinterval(old_switch)
+    out: dict = {}
+    print("\n### Sharded multi-worker serving: throughput by "
+          "workers x shards x scheme")
+    print(f"{'scheme':>8s} {'workers':>8s} {'shards':>7s} {'tok/s':>9s} "
+          f"{'speedup':>8s} {'unreclaimed':>12s} {'era spread':>11s}")
+    for sc in schemes:
+        base_tok_s = None
+        for (w, s) in configs:
+            row = cells[(sc, w, s)].row()
+            if base_tok_s is None:
+                base_tok_s = row["tok_s"]
+            row["speedup"] = row["tok_s"] / base_tok_s
+            out[(sc, w, s)] = row
+            print(f"{sc:>8s} {w:>8d} {s:>7d} {row['tok_s']:>9.1f} "
+                  f"{row['speedup']:>7.2f}x {row['unreclaimed']:>12d} "
+                  f"{row['era_spread']:>11d}")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--schemes", nargs="*",
+                    default=["WFE", "HE", "EBR", "2GEIBR"])
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--n-blocks", type=int, default=512)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--smoke-model", action="store_true",
+                    help="use the tiny smoke config instead of the scaled "
+                         "bench model (interpreter-bound; scaling flattens)")
+    ap.add_argument("--latency", action="store_true",
+                    help="also run the single-worker tick-latency suite")
+    args = ap.parse_args(argv)
+    if args.latency:
+        run()
+    run_scaling(workers=args.workers, shards=args.shards,
+                schemes=tuple(args.schemes), n_requests=args.requests,
+                new_tokens=args.new_tokens, n_blocks=args.n_blocks,
+                max_batch=args.max_batch, reps=args.reps,
+                build=_build_base if args.smoke_model else _build_bench)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

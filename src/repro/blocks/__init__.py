@@ -4,6 +4,7 @@ integrated as a first-class serving feature — DESIGN.md §2.1(A))."""
 from .block_pool import BlockPool, KVBlock, PoolExhausted
 from .block_table import BlockTableRef, TableVersion
 from .scheduler import Request, Scheduler
+from .sharded_pool import ShardedBlockPool
 
 __all__ = [
     "BlockPool",
@@ -12,5 +13,6 @@ __all__ = [
     "PoolExhausted",
     "Request",
     "Scheduler",
+    "ShardedBlockPool",
     "TableVersion",
 ]

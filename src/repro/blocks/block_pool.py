@@ -109,8 +109,12 @@ class BlockPool:
     def __init__(self, n_blocks: int, *, scheme: str = "WFE",
                  max_threads: int = 16, max_hes: int = 8,
                  cleanup_backend: str = "numpy", use_kernel: bool = False,
-                 vectorized_threshold: int = 64, **smr_kwargs):
+                 vectorized_threshold: int = 64, first_block: int = 0,
+                 **smr_kwargs):
         self.n_blocks = n_blocks
+        # slot ids live in [first_block, first_block + n_blocks): a sharded
+        # pool gives each shard a disjoint range of the one device pool
+        self.first_block = first_block
         # reclamation backend policy: retire lists below the threshold take
         # the scalar flush (batch setup isn't worth it), larger ones the
         # selected batched backend; use_kernel=True upgrades numpy -> pallas
@@ -130,7 +134,8 @@ class BlockPool:
             smr_kwargs = {("epoch_freq" if k == "era_freq" else k): v
                           for k, v in smr_kwargs.items()}
         self.smr = make_scheme(scheme, max_threads=max_threads, **smr_kwargs)
-        self._free = _FreeStack(range(n_blocks - 1, -1, -1))
+        self._free = _FreeStack(
+            range(first_block + n_blocks - 1, first_block - 1, -1))
         self._free_count = n_blocks  # advisory (racy) gauge
         self._lock_gauge = threading.Lock()
         # step-epoch anchor: one reservation protects a whole dispatched step
@@ -142,8 +147,12 @@ class BlockPool:
         return self.smr.register_thread()
 
     # ---------------------------------------------------------- allocation
-    def alloc(self, tid: int) -> KVBlock:
-        """Wait-free-reclaimed allocation of one pool slot."""
+    def alloc(self, tid: int, shard: Optional[int] = None) -> KVBlock:
+        """Wait-free-reclaimed allocation of one pool slot.
+
+        ``shard`` is accepted for interface parity with the sharded pool
+        (an unsharded pool is its own single shard).
+        """
         idx = self._free.pop()
         if idx is None:
             # drain our own retire list, then retry once
@@ -165,8 +174,23 @@ class BlockPool:
     def retire(self, blk: KVBlock, tid: int) -> None:
         self.smr.retire(blk, tid)
 
+    # ------------------------------------------------- SMR-managed metadata
+    def alloc_node(self, cls, tid: int, *args, shard: Optional[int] = None,
+                   **kwargs) -> Block:
+        """Allocate a non-pool SMR node (e.g. a block-table version).
+
+        Routed through the pool so sharded pools can pin the node to one
+        shard's clock (a block must retire where it was born); ``shard`` is
+        accepted for interface parity and ignored here.
+        """
+        return self.smr.alloc_block(cls, tid, *args, **kwargs)
+
+    def retire_node(self, blk: Block, tid: int) -> None:
+        self.smr.retire(blk, tid)
+
     # ---------------------------------------------------------- protection
-    def protect_step(self, slot: int, tid: int) -> None:
+    def protect_step(self, slot: int, tid: int,
+                     shard: Optional[int] = None) -> None:
         """Publish an era reservation covering every block alive now.
 
         Call before dispatching a device step; the returned reservation
@@ -175,8 +199,12 @@ class BlockPool:
         """
         self.smr.get_protected(self._epoch_view, slot, tid)
 
-    def release_step(self, slot: int, tid: int) -> None:
-        """Clear one step's reservation (device step completed)."""
+    def release_step(self, slot: int, tid: int,
+                     shard: Optional[int] = None) -> None:
+        """Clear one step's reservation (device step completed).
+
+        ``shard`` is accepted for interface parity (single-shard pool).
+        """
         # Per-slot clear: write the empty value for this scheme's slot kind
         # (WFE: (era, tag) pair keeps its tag; HE: era int; HP: pointer).
         smr = self.smr
@@ -192,7 +220,8 @@ class BlockPool:
             row.store(None)
 
     # ---------------------------------------------------------- reclamation
-    def cleanup(self, tid: int, *, vectorized_threshold: Optional[int] = None,
+    def cleanup(self, tid: int, *, shard: Optional[int] = None,
+                vectorized_threshold: Optional[int] = None,
                 use_kernel: Optional[bool] = None,
                 backend: Optional[str] = None) -> int:
         """Drain this thread's retire list.  Returns the number freed.
@@ -230,10 +259,17 @@ class BlockPool:
         with self._drain_lock:
             return self.smr.cleanup_batch_all(backend)
 
+    def advance_eras(self, tid: int) -> None:
+        """Tick the scheme's era/epoch clock (drain-progress helper)."""
+        self.smr.advance_era(tid)
+
     # ---------------------------------------------------------- metrics
     @property
     def free_blocks(self) -> int:
         return self._free_count
+
+    def unreclaimed(self) -> int:
+        return self.smr.unreclaimed()
 
     def stats(self) -> dict:
         s = self.smr.stats()

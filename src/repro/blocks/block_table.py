@@ -40,9 +40,16 @@ class TableVersion(Block):
 class BlockTableRef:
     """The mutable cell holding the current TableVersion for one request."""
 
-    def __init__(self, pool: BlockPool, tid: int):
+    def __init__(self, pool: BlockPool, tid: int, shard: Optional[int] = None):
         self._pool = pool
-        empty = pool.smr.alloc_block(TableVersion, tid, ())
+        # request -> shard pin: every page of this table comes from one
+        # shard's slot range, so the request's device steps touch exactly
+        # one shard's KV-pool chain (None = unpinned / unsharded pool)
+        self.shard = shard
+        # node alloc/retire go through the pool, not pool.smr directly: a
+        # sharded pool pins each version node to the REQUEST's shard so the
+        # scheduler's per-step cleanup of that shard drains them
+        empty = pool.alloc_node(TableVersion, tid, (), shard=shard)
         self._ref = AtomicRef(empty)
         self.view = PtrView(self._ref)
 
@@ -51,22 +58,22 @@ class BlockTableRef:
 
     def append_block(self, tid: int) -> KVBlock:
         """Allocate a pool block and publish a new table version."""
-        blk = self._pool.alloc(tid)
+        blk = self._pool.alloc(tid, shard=self.shard)
         old = self._ref.load()
-        new = self._pool.smr.alloc_block(
-            TableVersion, tid, old.blocks + (blk,))
+        new = self._pool.alloc_node(
+            TableVersion, tid, old.blocks + (blk,), shard=self.shard)
         self._ref.store(new)  # single writer per request (the scheduler)
-        self._pool.smr.retire(old, tid)
+        self._pool.retire_node(old, tid)
         return blk
 
     def release_all(self, tid: int) -> None:
         """Retire every block + the table itself (request finished/evicted)."""
         old = self._ref.load()
-        empty = self._pool.smr.alloc_block(TableVersion, tid, ())
+        empty = self._pool.alloc_node(TableVersion, tid, (), shard=self.shard)
         self._ref.store(empty)
         for blk in old.blocks:
             self._pool.retire(blk, tid)
-        self._pool.smr.retire(old, tid)
+        self._pool.retire_node(old, tid)
 
     def __len__(self) -> int:
         cur = self._ref.load()

@@ -11,6 +11,17 @@ protection are all wait-free-bounded WFE operations, so
 * in-flight device steps (dispatched asynchronously, possibly several deep)
   keep their block-table snapshots readable until completion via one era
   reservation per step (``protect_step``).
+
+Multi-worker discipline (the sharded serving runtime): several worker
+threads drive ``tick``/``complete`` concurrently.  Scheduling state (the
+active list, in-flight slots, request bookkeeping) is guarded by one
+scheduler lock held only across the *planning* and *accounting* phases —
+the device step itself runs outside it, so worker A can execute its step
+while worker B plans the next one (pipelining).  A request is stepped by at
+most one worker at a time (``Request.inflight``); eviction never targets a
+request whose step is in flight.  Stats are kept per worker — each worker
+increments only its own dict (single-writer, no lock, no lost updates) —
+and merged at aggregation time by the ``stats`` property.
 """
 
 from __future__ import annotations
@@ -20,14 +31,18 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
-from .block_pool import BlockPool, PoolExhausted
+from .block_pool import PoolExhausted
 from .block_table import BlockTableRef
 
 __all__ = ["Request", "StepPlan", "Scheduler"]
+
+#: every per-worker stats dict carries these keys (merged by ``stats``)
+STAT_KEYS = ("admitted", "completed", "evictions", "steps",
+             "deadline_cutoffs", "reclaimed")
 
 
 @dataclass
@@ -40,6 +55,8 @@ class Request:
     length: int = 0  # tokens materialized in the cache
     state: str = "queued"  # queued | active | done | evicted
     evictions: int = 0
+    inflight: bool = False  # a device step for this request is outstanding
+    shard: int = 0  # pool/device shard this request's pages live in
 
     @property
     def next_token(self) -> int:
@@ -61,55 +78,125 @@ class StepPlan:
     requests: List[Request]
     tokens: np.ndarray  # (B,) int32
     positions: np.ndarray  # (B,) int32
-    tables: np.ndarray  # (B, nblk) int32, padded with 0
+    tables: np.ndarray  # (B, nblk) int32, padded with 0 (global slot ids)
     lengths: np.ndarray  # (B,) int32 — context length INCLUDING this token
+    shard: int = 0  # every request in this plan lives in this shard
 
 
 class Scheduler:
-    def __init__(self, pool: BlockPool, *, block_size: int, max_batch: int,
+    def __init__(self, pool, *, block_size: int, max_batch: int,
                  max_inflight: int = 4, deadline_ms: float = 50.0):
         self.pool = pool
         self.block_size = block_size
         self.max_batch = max_batch
         self.max_inflight = max_inflight
         self.deadline_ms = deadline_ms
-        self.queue: deque = deque()
+        # request-level shard router: round-robin assignment at submit,
+        # one intake queue per shard (n_shards == 1 for unsharded pools)
+        self.n_shards = getattr(pool, "n_shards", 1)
+        self.queues: List[deque] = [deque() for _ in range(self.n_shards)]
         self.active: List[Request] = []
         self._qlock = threading.Lock()
+        # one lock for planning/accounting; the device step runs outside it
+        self._lock = threading.RLock()
+        # idle workers park here; complete()/submit() wake them (no hot
+        # spinning — a busy poll starves the working threads of the GIL)
+        self._work = threading.Condition(self._lock)
         self._rid = itertools.count()
         self._slots = deque(range(max_inflight))
-        self.stats: Dict[str, int] = {
-            "admitted": 0, "completed": 0, "evictions": 0, "steps": 0,
-            "deadline_cutoffs": 0, "reclaimed": 0,
-        }
+        # per-worker stats: tid -> dict, each written by its owner only
+        self._worker_stats: Dict[int, Dict[str, int]] = {}
+
+    def _wstats(self, tid: int) -> Dict[str, int]:
+        st = self._worker_stats.get(tid)
+        if st is None:
+            # dict.setdefault is atomic under the GIL; first writer wins
+            st = self._worker_stats.setdefault(
+                tid, {k: 0 for k in STAT_KEYS})
+        return st
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Merged view over the per-worker stat dicts (race-free: each dict
+        has a single writer; the merge reads a snapshot)."""
+        merged = {k: 0 for k in STAT_KEYS}
+        for st in list(self._worker_stats.values()):
+            for k in STAT_KEYS:
+                merged[k] += st[k]
+        return merged
 
     # --------------------------------------------------------------- intake
+    @property
+    def queue(self) -> List[Request]:
+        """Flat view over the per-shard intake queues (emptiness checks)."""
+        return [r for q in self.queues for r in q]
+
+    def pending(self) -> int:
+        with self._qlock:
+            return sum(len(q) for q in self.queues)
+
     def submit(self, prompt: List[int], max_new_tokens: int) -> Request:
         req = Request(next(self._rid), list(prompt), max_new_tokens)
+        req.shard = req.rid % self.n_shards  # round-robin shard router
         with self._qlock:
-            self.queue.append(req)
+            self.queues[req.shard].append(req)
+        with self._work:
+            self._work.notify_all()
         return req
+
+    def wait_for_work(self, timeout: float) -> None:
+        """Park until a step completes or a request arrives (idle workers)."""
+        with self._work:
+            self._work.wait(timeout)
 
     # --------------------------------------------------------------- tick
     def tick(self, tid: int) -> Optional[StepPlan]:
-        """Build one decode step.  Returns None when nothing is runnable."""
+        """Build one decode step.  Returns None when nothing is runnable.
+
+        With a sharded pool each plan draws from ONE shard (the plan's
+        device step then touches only that shard's KV-pool chain, so steps
+        on different shards execute concurrently).  Shards are tried
+        starting from the caller's affinity (``tid % n_shards``).
+        """
+        with self._lock:
+            for k in range(self.n_shards):
+                plan = self._tick_locked(tid, (tid + k) % self.n_shards)
+                if plan is not None:
+                    return plan
+            return None
+
+    def _tick_locked(self, tid: int, shard: int) -> Optional[StepPlan]:
+        stats = self._wstats(tid)
         t0 = time.monotonic()
         deadline = t0 + self.deadline_ms / 1e3
 
-        # admit
-        while len(self.active) < self.max_batch:
+        # admit (into this shard's active set)
+        def shard_load():
+            n = inflight = 0
+            for r in self.active:
+                if r.shard == shard:
+                    n += 1
+                    inflight += r.inflight
+            return n, inflight
+
+        while True:
+            n_active, n_inflight = shard_load()
+            if n_active >= self.max_batch + n_inflight:
+                break
             with self._qlock:
-                if not self.queue:
+                if not self.queues[shard]:
                     break
-                req = self.queue.popleft()
+                req = self.queues[shard].popleft()
             if req.table is None:
-                req.table = BlockTableRef(self.pool, tid)
+                req.table = BlockTableRef(
+                    self.pool, tid,
+                    shard=req.shard if self.n_shards > 1 else None)
             req.state = "active"
             self.active.append(req)
-            self.stats["admitted"] += 1
+            stats["admitted"] += 1
             if time.monotonic() > deadline:
                 # straggler mitigation: cut the batch, run what we have
-                self.stats["deadline_cutoffs"] += 1
+                stats["deadline_cutoffs"] += 1
                 break
 
         if not self.active:
@@ -120,11 +207,16 @@ class Scheduler:
         # ensure block capacity for one more token per request.  Priority is
         # admission order (FCFS): under pool pressure the NEWEST request is
         # preempted (vLLM-style LIFO preemption), so the oldest request
-        # makes monotonic progress — no eviction livelock.
+        # makes monotonic progress — no eviction livelock.  Requests whose
+        # previous step is still in flight (another worker's) are skipped;
+        # they rejoin once that worker completes them.
         runnable: List[Request] = []
         for req in list(self.active):
-            if req.state != "active":
-                continue  # evicted earlier in this loop
+            if req.state != "active" or req.inflight or req.shard != shard:
+                continue  # evicted earlier in this loop, being stepped,
+                # or pinned to a different shard's device chain
+            if len(runnable) >= self.max_batch:
+                break
             if req.length % self.block_size == 0:  # needs a fresh block
                 got = False
                 while not got:
@@ -132,7 +224,7 @@ class Scheduler:
                         req.table.append_block(tid)
                         got = True
                     except PoolExhausted:
-                        victim = self._pick_victim(exclude=req)
+                        victim = self._pick_victim(exclude=req, shard=shard)
                         if victim is None:
                             break  # req is the newest; it waits this tick
                         if victim in runnable:
@@ -147,8 +239,9 @@ class Scheduler:
         slot = self._slots.popleft()
         # ORDER MATTERS (Lemma 4 discipline): publish the era reservation
         # FIRST, then snapshot tables — everything read after the publish is
-        # covered by the reservation's era.
-        self.pool.protect_step(slot, tid)
+        # covered by the reservation's era.  A sharded plan reserves only in
+        # its own shard (all its blocks live there).
+        self.pool.protect_step(slot, tid, shard=shard)
 
         b = len(runnable)
         nblk = max(len(r.table) for r in runnable)
@@ -157,40 +250,68 @@ class Scheduler:
         positions = np.zeros((b,), np.int32)
         lengths = np.zeros((b,), np.int32)
         for i, req in enumerate(runnable):
+            req.inflight = True
             snap = req.table.current()  # protected snapshot
             ids = snap.block_ids
             tables[i, : len(ids)] = ids
             tokens[i] = req.next_token
             positions[i] = req.length
             lengths[i] = req.length + 1
-        self.stats["steps"] += 1
-        return StepPlan(slot, runnable, tokens, positions, tables, lengths)
+        stats["steps"] += 1
+        return StepPlan(slot, runnable, tokens, positions, tables, lengths,
+                        shard=shard)
 
     # --------------------------------------------------------------- complete
     def complete(self, plan: StepPlan, sampled: np.ndarray, tid: int) -> None:
         """Account one finished device step; release its reservation."""
-        for req, tok in zip(plan.requests, sampled):
-            req.length += 1
-            # the step that consumed the last prompt token produces the
-            # first generated token
-            if req.length >= len(req.prompt):
-                req.generated.append(int(tok))
-            if req.done:
-                req.state = "done"
-                req.table.release_all(tid)
-                self.active.remove(req)
-                self.stats["completed"] += 1
-        self.pool.release_step(plan.slot, tid)
-        self._slots.append(plan.slot)
+        stats = self._wstats(tid)
+        with self._lock:
+            for req, tok in zip(plan.requests, sampled):
+                req.inflight = False
+                req.length += 1
+                # the step that consumed the last prompt token produces the
+                # first generated token
+                if req.length >= len(req.prompt):
+                    req.generated.append(int(tok))
+                if req.done:
+                    req.state = "done"
+                    req.table.release_all(tid)
+                    self.active.remove(req)
+                    stats["completed"] += 1
+            self.pool.release_step(plan.slot, tid, shard=plan.shard)
+            self._slots.append(plan.slot)
+            self._work.notify_all()  # freed a slot + un-inflighted requests
+        # shard-clock merge rides on the step boundary (sharded pools)
+        boundary = getattr(self.pool, "step_boundary", None)
+        if boundary is not None:
+            boundary(tid)
         # batched drain (era_table backends) once the list crosses the
-        # pool's vectorized threshold; scalar flush below it
-        self.stats["reclaimed"] += self.pool.cleanup(tid)
+        # pool's vectorized threshold; scalar flush below it.  Outside the
+        # scheduler lock: reclamation must never block planning.  Under
+        # sharding every retire from this complete — blocks AND table
+        # versions, both pinned to the request's shard — landed in
+        # plan.shard, so one shard's drain covers them.
+        stats["reclaimed"] += self.pool.cleanup(tid, shard=plan.shard)
 
     # --------------------------------------------------------------- evict
-    def _pick_victim(self, exclude: Request) -> Optional[Request]:
-        """LIFO preemption: the newest admission yields (vLLM policy)."""
-        if self.active and self.active[-1] is not exclude:
-            return self.active[-1]
+    def _pick_victim(self, exclude: Request,
+                     shard: Optional[int] = None) -> Optional[Request]:
+        """LIFO preemption: the newest admission yields (vLLM policy).
+
+        Never preempts a request whose step is in flight — its block-table
+        snapshot is feeding a device step right now (the era reservation
+        keeps the blocks readable, but restarting the request mid-step
+        would corrupt its token accounting).  Under sharding the victim
+        must live in the pressured shard — evicting elsewhere frees the
+        wrong slot range.
+        """
+        for req in reversed(self.active):
+            if req is exclude:
+                continue
+            if shard is not None and req.shard != shard:
+                continue
+            if req.state == "active" and not req.inflight:
+                return req
         return None
 
     def _evict(self, req: Request, tid: int) -> None:
@@ -201,6 +322,10 @@ class Scheduler:
         req.evictions += 1
         self.active.remove(req)
         with self._qlock:
-            self.queue.append(req)
-        self.stats["evictions"] += 1
-        self.stats["reclaimed"] += self.pool.cleanup(tid)
+            self.queues[req.shard].append(req)
+        stats = self._wstats(tid)
+        stats["evictions"] += 1
+        # scoped to the pressured shard: _evict runs under the scheduler
+        # lock, so a full cross-shard fan-out here would serialize every
+        # other worker's planning behind reclamation
+        stats["reclaimed"] += self.pool.cleanup(tid, shard=req.shard)

@@ -3,7 +3,10 @@
 Turn-based helping: enqueuers publish their node in ``enqueuers[tid]`` and
 every thread helps the next registered request in round-robin (turn) order
 starting after the tid that enqueued the current tail; dequeuers publish a
-``Request`` and nodes are *assigned* to the next open request in turn order.
+``Request`` and nodes are *assigned* to the next open request in turn order;
+delivery hands over an immutable ``_Answer`` box carrying the node AND its
+item, captured while the node is provably pre-consumption — the requester
+never re-dereferences a node a later dequeue may have already retired.
 
 The enqueue side is the published algorithm (deregister-the-tail's-request
 before linking, then link the next request in turn order, then swing tail).
@@ -11,7 +14,7 @@ before linking, then link the next request in turn order, then swing tail).
 The dequeue side keeps the poster's structure (per-thread request slots,
 turn-ordered assignment via a ``deq_tid`` CAS on the node, retire-previous-
 request reclamation) but uses an explicit ternary answer handshake
-(``answer: None → node | EMPTY``) for delivery: the poster's four-way
+(``answer: None → _Answer | EMPTY``) for delivery: the poster's four-way
 ``deqself/deqhelp/giveUp/casDeqAndHead`` interplay is under-specified in the
 text we reproduce from, and a mis-remembered "faithful" port would be worse
 than a provably safe variant.  The handshake preserves the key properties:
@@ -47,6 +50,23 @@ class _Empty:
 
 
 EMPTY = _Empty()
+
+
+class _Answer:
+    """Immutable delivery record: the assigned node plus its item.
+
+    The item is captured by the DELIVERER, at a point where the node is
+    still head-adjacent (pre-consumption) and covered by the deliverer's
+    reservation.  Requesters read the item from here — re-dereferencing the
+    node after delivery was a use-after-free under HP with concurrent
+    consumers (a later dequeue may already have retired and poisoned it).
+    """
+
+    __slots__ = ("node", "item")
+
+    def __init__(self, node: "_Node", item: Any):
+        self.node = node
+        self.item = item
 
 
 class _Node(Block):
@@ -127,7 +147,13 @@ class CRTurnQueue:
     # -- dequeue helping ----------------------------------------------------------
     def _open_request(self, cand_tid: int, tid: int) -> Optional[_Request]:
         r = self.smr.get_protected(self._dreq_views[cand_tid], _REQ, tid)
-        if r is None or r.answer.load() is not None:
+        if r is None or r.freed:
+            return None
+        # the request may have been deregistered+retired between our load
+        # and this read (a reservation published after the retire cannot
+        # pin it); a poisoned answer marks exactly that dead state
+        ans_cell = r.answer
+        if ans_cell is POISON or ans_cell.load() is not None:
             return None
         return r
 
@@ -148,11 +174,20 @@ class CRTurnQueue:
             bound = smr.get_protected(PtrView(lnext.deq_req), _SPARE, tid, parent=lnext)
             if bound is None:
                 return  # no open requests at all
-        # deliver (at most once: answer CASes None -> lnext)
-        if not bound.answer.cas(None, lnext):
-            ans = bound.answer.load()
-            if ans is not lnext:
-                # provably dead binding (closed EMPTY / answered elsewhere):
+        # deliver (at most once: answer CASes None -> _Answer(lnext, item));
+        # the item is read HERE — lnext is protected and head has not
+        # advanced past it, the only window where the read is safe.
+        # The binding itself may be DEAD: an owner only moves on after its
+        # answer is set, so a retired — possibly already freed/poisoned —
+        # bound request implies this binding was answered or closed; never
+        # deliver into it (its owner will not read it), rebind instead.
+        ans_cell = bound.answer if not bound.freed else POISON
+        delivered = (ans_cell is not POISON
+                     and ans_cell.cas(None, _Answer(lnext, lnext.item)))
+        if not delivered:
+            ans = ans_cell.load() if ans_cell is not POISON else None
+            if ans is None or ans is EMPTY or ans.node is not lnext:
+                # dead binding (freed / closed EMPTY / answered elsewhere):
                 # rebind to another open request in turn order
                 for j in range(1, self.n + 1):
                     cand_tid = (turn + j) % self.n
@@ -204,9 +239,9 @@ class CRTurnQueue:
             ans = r.answer.load()
             if ans is EMPTY:
                 return None
-            # ans is the delivered node (the new head sentinel); its item is ours
-            node = smr.get_protected(PtrView(r.answer), _SPARE, tid, parent=r)
-            item = node.item
+            # ans is the delivery record; its item was captured while the
+            # node was still protected and pre-consumption
+            item = ans.item
             assert item is not POISON, "use-after-free reading dequeued item"
             return item
         finally:

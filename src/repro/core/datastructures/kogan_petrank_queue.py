@@ -42,19 +42,30 @@ class _Node(Block):
 
 
 class _OpDesc(Block):
-    """Immutable once published."""
+    """Immutable once published.
 
-    __slots__ = ("phase", "pending", "enqueue", "node")
+    ``value`` carries the dequeued value for completed dequeues: it is
+    captured by the completing helper while the new sentinel is provably
+    pre-consumption (protected and still head-adjacent), so the owning
+    dequeuer never has to re-dereference a node that a later dequeue may
+    already have retired — that re-read was a use-after-free under HP with
+    concurrent consumers.
+    """
 
-    def __init__(self, phase: int, pending: bool, enqueue: bool, node: Optional[_Node]):
+    __slots__ = ("phase", "pending", "enqueue", "node", "value")
+
+    def __init__(self, phase: int, pending: bool, enqueue: bool,
+                 node: Optional[_Node], value: Any = None):
         super().__init__()
         self.phase = phase
         self.pending = pending
         self.enqueue = enqueue
         self.node = node
+        self.value = value
 
     def _poison_payload(self) -> None:
         self.node = POISON  # type: ignore[assignment]
+        self.value = POISON
 
 
 class KPQueue:
@@ -173,7 +184,12 @@ class KPQueue:
         if dtid != -1:
             cur = self._desc(dtid, tid)
             if first is self.head.load() and nxt is not None:
-                new = smr.alloc_block(_OpDesc, tid, cur.phase, False, False, cur.node)
+                # capture the dequeued value NOW: nxt is protected (slot
+                # _NEXT, published before the head check) and head has not
+                # advanced past it yet, so it cannot have been retired —
+                # the only window in which reading it is safe under HP
+                new = smr.alloc_block(_OpDesc, tid, cur.phase, False, False,
+                                      cur.node, nxt.value)
                 if self.state[dtid].cas(cur, new):
                     smr.retire(cur, tid)
                 else:
@@ -211,9 +227,9 @@ class KPQueue:
             node = cur.node  # the sentinel this dequeue consumed
             if node is None:
                 return None  # empty
-            # value lives in node.next (the new sentinel); protect it while read
-            target = smr.get_protected(PtrView(node.next), _SPARE, tid, parent=node)
-            value = target.value
+            # the completing helper captured the value into the desc while
+            # the new sentinel was still protected and pre-consumption
+            value = cur.value
             assert value is not POISON, "use-after-free reading dequeued value"
             smr.retire(node, tid)  # only the owning dequeuer retires its sentinel
             return value

@@ -103,6 +103,8 @@ class NatarajanBST:
                 current_field = (None, False, False)
             else:
                 cur_cell = leaf.left if key < leaf.key else leaf.right
+                if cur_cell is POISON:
+                    continue  # stale publish of a reclaimed node: re-seek
                 current_field = self._read_edge(cur_cell, _CUR, tid, leaf)
             cur = current_field[0]
             ok = True
@@ -122,6 +124,9 @@ class NatarajanBST:
                 if cur.is_leaf:
                     break
                 cur_cell = cur.left if key < cur.key else cur.right
+                if cur_cell is POISON:
+                    ok = False  # stale publish of a reclaimed node: re-seek
+                    break
                 current_field = self._read_edge(cur_cell, _CUR, tid, cur)
                 cur = current_field[0]
                 if cur_cell.load()[0] is not cur:
@@ -140,6 +145,12 @@ class NatarajanBST:
             child_cell, sibling_cell = parent.left, parent.right
         else:
             child_cell, sibling_cell = parent.right, parent.left
+        if succ_cell is POISON or child_cell is POISON \
+                or sibling_cell is POISON:
+            # ancestor/parent already reclaimed: the record is stale (HP can
+            # publish a pointer read from an already-spliced-out edge; the
+            # poison makes that visible) — the chain was resolved elsewhere
+            return False
         child_val = child_cell.load()
         if not child_val[1]:
             # our leaf's edge is not flagged: the delete being helped flagged
@@ -235,11 +246,16 @@ class NatarajanBST:
         smr = self.smr
         smr.start_op(tid)
         try:
-            rec = self._seek(key, tid)
-            if rec.leaf.key == key:
+            while True:
+                rec = self._seek(key, tid)
+                if rec.leaf.key != key:
+                    return None
+                # read value FIRST, then check liveness: checking freed
+                # before the read would leave a window where the reclaimer
+                # poisons the value in between (stale publish, see _seek)
                 value = rec.leaf.value
-                assert value is not POISON, "use-after-free in BST get"
+                if rec.leaf.freed or value is POISON:
+                    continue  # stale leaf (reclaimed before publish): re-seek
                 return value
-            return None
         finally:
             smr.end_op(tid)

@@ -87,6 +87,12 @@ class EBR(SMRScheme):
     def clear(self, tid: int) -> None:
         pass  # protection is the epoch bracket, not per-pointer state
 
+    def era_clock(self):
+        return self.global_epoch
+
+    def advance_era(self, tid: int) -> None:
+        self.global_epoch.fa_add(1)
+
     def flush(self, tid: int) -> None:
         self.global_epoch.fa_add(1)
         self.cleanup(tid)

@@ -84,6 +84,12 @@ class HazardEras(SMRScheme):
     def transfer(self, src: int, dst: int, tid: int) -> None:
         self.reservations[tid][dst].store(self.reservations[tid][src].load())
 
+    def era_clock(self):
+        return self.global_era
+
+    def advance_era(self, tid: int) -> None:
+        self.global_era.fa_add(1)
+
     def clear(self, tid: int) -> None:
         for j in range(self.max_hes):
             self.reservations[tid][j].store(INF_ERA)

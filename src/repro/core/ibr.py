@@ -103,6 +103,12 @@ class IBR2GE(SMRScheme):
     def clear(self, tid: int) -> None:
         pass  # the interval bracket is the protection
 
+    def era_clock(self):
+        return self.global_epoch
+
+    def advance_era(self, tid: int) -> None:
+        self.global_epoch.fa_add(1)
+
     def flush(self, tid: int) -> None:
         self.cleanup(tid)
 

@@ -43,13 +43,16 @@ class Block:
     that unsafe reclamation manifests as an explicit error.
     """
 
-    __slots__ = ("alloc_era", "retire_era", "birth_epoch", "freed")
+    __slots__ = ("alloc_era", "retire_era", "birth_epoch", "freed", "home_shard")
 
     def __init__(self) -> None:
         self.alloc_era = 0
         self.retire_era = INF_ERA
         self.birth_epoch = 0  # used by IBR
         self.freed = False
+        # owning SMR shard (sharded pools); eras are only comparable within
+        # one instance's clock, so a block must retire where it was born
+        self.home_shard = 0
 
     def _poison_payload(self) -> None:
         """Overwrite payload slots with POISON.  Subclasses extend."""
@@ -136,6 +139,25 @@ class SMRScheme:
 
     def flush(self, tid: int) -> None:
         """Best-effort cleanup of this thread's retire list (benchmark drain)."""
+
+    # -- era clock (distributed-eras hooks) ----------------------------------
+    def era_clock(self):
+        """The scheme's global era/epoch counter (AtomicInt), or None.
+
+        Schemes without a global clock (HP, Leak) return None; the
+        distributed-era machinery (``core/distributed_eras.py``) skips them
+        — there is nothing to merge across shards.
+        """
+        return None
+
+    def advance_era(self, tid: int) -> None:
+        """Tick the global era/epoch clock once (no-op without a clock).
+
+        WFE overrides this with ``increment_era`` so a drive-by advance
+        still honours the helping obligation; epoch schemes bump the epoch
+        so grace periods can expire at quiescence.  Used by the engine's
+        era-progress-bounded drain and the sharded pool's merge step.
+        """
 
     # -- batched reclamation (era_table.py) ----------------------------------
     #: True when the scheme publishes reservation intervals for the scan

@@ -119,6 +119,12 @@ class WFE(SMRScheme):
                         self.help_thread(i, j, tid)
         self.global_era.fa_add(1)
 
+    def era_clock(self):
+        return self.global_era
+
+    def advance_era(self, tid: int) -> None:
+        self.increment_era(tid)  # drive-by advances still help first
+
     # -- protected dereference (paper lines 12-50) ------------------------------
     def get_protected(self, ptr: Any, index: int, tid: int, parent: Optional[Block] = None) -> Any:
         resv = self.reservations[tid][index]

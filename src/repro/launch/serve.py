@@ -5,6 +5,11 @@ mesh (see launch/dryrun.py for the sweep).
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
       --requests 16 --new-tokens 12 --scheme WFE
+
+Sharded multi-worker runtime (one SMR instance per shard, era clocks
+max-merged on step boundaries; K worker threads pipelining device steps):
+
+  PYTHONPATH=src python -m repro.launch.serve --shards 4 --workers 4
 """
 
 from __future__ import annotations
@@ -16,7 +21,7 @@ import jax
 
 from repro.configs import ALL_ARCHS, get_smoke_config
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import ServeEngine, ServeRuntime
 
 
 def main(argv=None) -> int:
@@ -31,6 +36,13 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--force-slow-path", action="store_true",
                     help="WFE max_attempts=1 (paper §5 stress)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="pool shards, each with its own SMR instance "
+                         "joined by the distributed era clock")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="serve worker threads (pipelined device steps)")
+    ap.add_argument("--merge-freq", type=int, default=1,
+                    help="steps between shard era-clock max-merges")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -46,17 +58,24 @@ def main(argv=None) -> int:
     engine = ServeEngine(cfg, params, n_blocks=args.n_blocks,
                          block_size=args.block_size,
                          max_batch=args.max_batch, scheme=args.scheme,
+                         n_shards=args.shards, merge_freq=args.merge_freq,
+                         max_threads=max(8, args.workers + 1),
+                         max_inflight=max(4, args.workers),
                          **smr_kwargs)
-    tid = engine.pool.register_thread()
     for i in range(args.requests):
         prompt = [(3 * i + j) % cfg.vocab_size for j in range(1 + i % 6)]
         engine.submit(prompt, args.new_tokens)
     t0 = time.time()
-    stats = engine.run(tid)
+    if args.workers > 1:
+        runtime = ServeRuntime(engine, n_workers=args.workers)
+        stats = runtime.serve()
+    else:
+        tid = engine.pool.register_thread()
+        stats = engine.run(tid)
     dt = time.time() - t0
     toks = stats["completed"] * args.new_tokens
-    print(f"scheme={args.scheme} completed={stats['completed']} "
-          f"tokens={toks} ({toks/dt:.1f} tok/s)")
+    print(f"scheme={args.scheme} shards={args.shards} workers={args.workers} "
+          f"completed={stats['completed']} tokens={toks} ({toks/dt:.1f} tok/s)")
     print("scheduler:", stats)
     print("pool:", engine.pool.stats())
     return 0

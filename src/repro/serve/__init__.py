@@ -2,5 +2,7 @@
 
 from .engine import ServeEngine
 from .paged_model import paged_decode_step, paged_prefill_into_pool
+from .runtime import ServeRuntime
 
-__all__ = ["ServeEngine", "paged_decode_step", "paged_prefill_into_pool"]
+__all__ = ["ServeEngine", "ServeRuntime", "paged_decode_step",
+           "paged_prefill_into_pool"]

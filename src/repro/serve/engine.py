@@ -8,33 +8,80 @@ The full adaptation loop (DESIGN.md §2.1(A)):
   block tables -> complete(): append tokens, retire finished requests'
   blocks (WFE retire), release the step reservation, cleanup() reclaims.
 
-Greedy sampling; the device step runs synchronously on CPU here, with an
-optional ``inflight_depth`` that keeps several protected steps outstanding
-to exercise the multi-reservation path the way an async TPU runtime would.
-
+Greedy sampling; the device step dispatches through one jitted function.
 ``use_kernel=True`` accelerates BOTH compute paths: paged decode attention
 takes the Pallas kernel AND reclamation takes the Pallas ``era_scan``
 backend of ``cleanup_batch`` (``cleanup_backend="pallas"``); otherwise the
-NumPy backend vectorizes the scan.  ``run()`` additionally drains every
-thread's retire list with one fused cross-thread scan (``cleanup_all``) on
-idle ticks and at shutdown, so blocks retired by other worker threads are
-reclaimed even when those threads stop ticking.
+NumPy backend vectorizes the scan.
+
+Concurrency: ``step()`` is safe to call from many worker threads (the
+``ServeRuntime`` in ``runtime.py`` does exactly that).  Scheduling and
+accounting are serialized inside the scheduler; the device dispatch is
+serialized by a short lock (the KV pools are a functional-update chain),
+but the *blocking wait* on the result happens outside every lock — while
+worker A waits on XLA, worker B plans and dispatches the next step against
+a disjoint set of requests (``max_inflight`` era-reservation slots deep).
+
+``n_shards > 1`` splits the pool into per-shard SMR instances joined by
+the distributed era clock (``blocks/sharded_pool.py``): per-shard retire
+lists and clocks, max-merged on step boundaries.
+
+Shutdown runs ``drain()`` — an era-progress-bounded fleet drain that
+provably terminates (every round either frees a block or ticks every era
+clock, and at quiescence each scheme frees all blocks within a bounded
+number of clock ticks), replacing the old fixed-64-round loop.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import functools
+import threading
+import time
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.blocks import BlockPool, Scheduler
+from repro.blocks import BlockPool, Scheduler, ShardedBlockPool
 from repro.models.common import ArchConfig
 
 from .paged_model import init_pools, paged_decode_step
 
 __all__ = ["ServeEngine"]
+
+#: era ticks a quiescent drain may need before every scheme must have
+#: reclaimed everything: EBR's two grace periods + one for the stamp round,
+#: +1 slack.  More stalled rounds than this means a reservation is still
+#: held (an in-flight step) — drain returns instead of spinning.
+DRAIN_ERA_BOUND = 4
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_step(cfg, use_kernel: bool):
+    """Shared jitted decode step (ArchConfig is frozen/hashable): engines
+    over the same config reuse one compilation cache instead of re-tracing
+    per instance — the scaling benchmark builds a dozen engines."""
+    return jax.jit(
+        lambda params, pools, tables, lengths, tokens, positions:
+        paged_decode_step(cfg, params, pools, tables, lengths, tokens,
+                          positions, use_kernel=use_kernel),
+        donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_decode(cfg, use_kernel: bool):
+    """Serve-loop variant with greedy sampling fused into the step: the
+    host pulls back (B,) sampled ids, not (B, vocab) logits, and skips a
+    second dispatch round-trip per token."""
+
+    def _decode(params, pools, tables, lengths, tokens, positions):
+        logits, pools = paged_decode_step(
+            cfg, params, pools, tables, lengths, tokens, positions,
+            use_kernel=use_kernel)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), pools
+
+    return jax.jit(_decode, donate_argnums=(1,))
 
 
 class ServeEngine:
@@ -42,56 +89,177 @@ class ServeEngine:
                  block_size: int = 8, max_batch: int = 8,
                  scheme: str = "WFE", use_kernel: bool = False,
                  cleanup_backend: str = "numpy",
-                 max_threads: int = 8, **smr_kwargs):
+                 max_threads: int = 8, n_shards: int = 1,
+                 max_inflight: int = 4, merge_freq: int = 1,
+                 pad_shapes: bool = True, **smr_kwargs):
         self.cfg = cfg
         self.params = params
         self.block_size = block_size
         self.use_kernel = use_kernel
-        self.pool = BlockPool(n_blocks, scheme=scheme,
-                              max_threads=max_threads,
-                              cleanup_backend=cleanup_backend,
-                              use_kernel=use_kernel, **smr_kwargs)
+        # shape bucketing: pad every step to (max_batch, pow2 table width)
+        # so XLA compiles once per bucket instead of once per (B, nblk) —
+        # without it the serve loop is recompile-bound (hundreds of ms per
+        # shape) and multi-worker pipelining has nothing to overlap
+        self.pad_shapes = pad_shapes
+        self.max_batch = max_batch
+        pool_kwargs = dict(scheme=scheme, max_threads=max_threads,
+                           cleanup_backend=cleanup_backend,
+                           use_kernel=use_kernel, **smr_kwargs)
+        self.pool: Union[BlockPool, ShardedBlockPool]
+        if n_shards > 1:
+            self.pool = ShardedBlockPool(n_blocks, n_shards=n_shards,
+                                         merge_freq=merge_freq, **pool_kwargs)
+        else:
+            self.pool = BlockPool(n_blocks, **pool_kwargs)
         self.sched = Scheduler(self.pool, block_size=block_size,
-                               max_batch=max_batch)
-        self.pools = init_pools(cfg, n_blocks, block_size)
-        self._step = jax.jit(
-            lambda params, pools, tables, lengths, tokens, positions:
-            paged_decode_step(cfg, params, pools, tables, lengths, tokens,
-                              positions, use_kernel=use_kernel))
+                               max_batch=max_batch,
+                               max_inflight=max_inflight)
+        # ONE device-pool chain per shard: a step's functional KV update
+        # depends on the previous value of the pools it touches, so a
+        # single chain serializes every step's compute.  Request-level
+        # sharding makes each plan touch exactly one shard's pages, giving
+        # n_shards independent chains that execute concurrently.
+        if n_shards > 1:
+            self._shard_bases = [p.first_block for p in self.pool.shards]
+            self._shard_sizes = [p.n_blocks for p in self.pool.shards]
+        else:
+            self._shard_bases = [0]
+            self._shard_sizes = [n_blocks]
+        pad = 1 if pad_shapes else 0
+        # one extra scratch slot per shard absorbs the KV writes of
+        # batch-padding rows — it is never handed out by the block pool, so
+        # padded steps can't corrupt a live request's pages
+        self._shard_pools = [init_pools(cfg, size + pad, block_size)
+                             for size in self._shard_sizes]
+        # per-shard dispatch locks: each serializes one shard's functional
+        # KV-pool chain; the wait on the device result happens outside
+        self._device_locks = [threading.Lock() for _ in self._shard_sizes]
+        # donated pools: the step's functional KV update writes in place
+        # instead of copying every page each token (CPU hosts)
+        self._step = _jit_step(cfg, use_kernel)
+        self._decode = _jit_decode(cfg, use_kernel)
+
+    # legacy single-shard view of the device pools (tests/benchmarks drive
+    # engine._step with engine.pools directly)
+    @property
+    def pools(self):
+        return self._shard_pools[0]
+
+    @pools.setter
+    def pools(self, value):
+        self._shard_pools[0] = value
 
     def submit(self, prompt: List[int], max_new_tokens: int):
         return self.sched.submit(prompt, max_new_tokens)
 
     def step(self, tid: int) -> bool:
-        """One scheduler tick + device step.  Returns False when idle."""
+        """One scheduler tick + device step.  Returns False when idle.
+
+        Thread-safe: callable concurrently from several workers (each with
+        its own registered ``tid``).
+        """
         plan = self.sched.tick(tid)
         if plan is None:
             return False
-        logits, self.pools = self._step(
-            self.params, self.pools,
-            jnp.asarray(plan.tables), jnp.asarray(plan.lengths),
-            jnp.asarray(plan.tokens), jnp.asarray(plan.positions))
-        sampled = np.asarray(jnp.argmax(logits, axis=-1))
+        s = plan.shard
+        base = self._shard_bases[s]
+        pad_slot = self._shard_sizes[s]  # shard-local scratch slot id
+        # shard-local slot ids: the plan's tables name global slots; this
+        # shard's device pool indexes [0, size + pad).  Column padding (0
+        # fill) clamps to local 0 — never written, reads masked by length.
+        local = np.maximum(plan.tables.astype(np.int32) - base, 0)
+        tables, lengths = local, plan.lengths
+        tokens, positions = plan.tokens, plan.positions
+        b = tables.shape[0]
+        if self.pad_shapes:
+            nblk = tables.shape[1]
+            w = 1 << max(0, nblk - 1).bit_length()
+            bb = self.max_batch
+            tables = np.full((bb, w), pad_slot, np.int32)
+            tables[:b, :] = 0
+            tables[:b, :nblk] = local
+            lengths = np.ones((bb,), np.int32)  # pad rows: one scratch token
+            lengths[:b] = plan.lengths
+            tokens = np.zeros((bb,), np.int32)
+            tokens[:b] = plan.tokens
+            positions = np.zeros((bb,), np.int32)
+            positions[:b] = plan.positions
+        with self._device_locks[s]:
+            out, self._shard_pools[s] = self._decode(
+                self.params, self._shard_pools[s],
+                jnp.asarray(tables), jnp.asarray(lengths),
+                jnp.asarray(tokens), jnp.asarray(positions))
+        # block on the result OUTSIDE the lock: other workers plan/dispatch
+        # and execute OTHER shards' chains while this one waits
+        sampled = np.asarray(out)[:b]
         self.sched.complete(plan, sampled, tid)
         return True
 
-    def run(self, tid: int, max_steps: int = 10_000) -> Dict[str, int]:
+    # ------------------------------------------------------------- drain
+    def drain(self, tid: int) -> int:
+        """Era-progress-bounded final drain; returns blocks left unreclaimed.
+
+        Termination proof sketch: each loop iteration either (a) frees at
+        least one block — possible at most R times, R the finite number of
+        retired blocks, and freeing never retires more — or (b) advances
+        every era/epoch clock once, which happens at most DRAIN_ERA_BOUND
+        times consecutively before the loop exits.  Total iterations are
+        therefore bounded by R * (DRAIN_ERA_BOUND + 1) + DRAIN_ERA_BOUND.
+        At quiescence (all reservations released, all brackets closed)
+        every scheme reclaims everything within DRAIN_ERA_BOUND clock
+        ticks — EBR needs its two grace periods, era schemes one scan — so
+        a nonzero return value means a reservation is genuinely still held.
+        """
+        pool = self.pool
+        stalled = 0
+        while pool.unreclaimed() > 0:
+            freed = pool.cleanup_all()
+            freed += pool.cleanup(tid)
+            if freed > 0:
+                stalled = 0
+                continue
+            if stalled >= DRAIN_ERA_BOUND:
+                break  # pinned by a live reservation; caller still holds it
+            pool.advance_eras(tid)
+            stalled += 1
+        return pool.unreclaimed()
+
+    # ------------------------------------------------------------- run loops
+    def run_worker(self, tid: int, max_steps: int = 10_000,
+                   stop: Optional[threading.Event] = None) -> int:
+        """Worker loop: step until the queue AND active set are empty.
+
+        Used by every ``ServeRuntime`` worker thread; does NOT run the
+        final drain (the runtime drains once after all workers join).
+        ``stop`` aborts promptly (a sibling worker died — its in-flight
+        requests would otherwise stall this loop until ``max_steps``).
+        Returns the number of productive steps taken.
+        """
         steps = 0
-        while steps < max_steps:
-            if not self.step(tid):
-                with self.sched._qlock:
-                    empty = not self.sched.queue
-                if empty and not self.sched.active:
-                    break
-                # idle tick: fused cross-thread drain — reclaim blocks
-                # retired by workers that are stalled or done ticking
-                self.pool.cleanup_all()
+        productive = 0
+        idle = 0
+        while steps < max_steps and (stop is None or not stop.is_set()):
             steps += 1
-        # final drain: every thread's retire list in one batched scan per
-        # round (era advances between rounds unblock epoch-style schemes)
-        for _ in range(64):
-            if self.pool.cleanup_all() == 0 and \
-                    self.pool.smr.unreclaimed() == 0:
+            if self.step(tid):
+                productive += 1
+                idle = 0
+                continue
+            if not self.sched.pending() and not self.sched.active:
                 break
-            self.pool.cleanup(tid)
+            # idle tick: another worker's steps are in flight, or blocks
+            # need reclaiming before allocation can proceed.  The fused
+            # cross-thread drain reclaims blocks retired by workers that
+            # are stalled or done ticking.  Back off while idle — a hot
+            # spin here starves the working threads of the GIL.
+            idle += 1
+            if idle % 4 == 1:
+                self.pool.cleanup_all()
+            else:
+                self.sched.wait_for_work(0.002)
+        return productive
+
+    def run(self, tid: int, max_steps: int = 10_000) -> Dict[str, int]:
+        """Single-threaded serve loop + era-progress-bounded final drain."""
+        self.run_worker(tid, max_steps)
+        self.drain(tid)
         return dict(self.sched.stats)

@@ -1,0 +1,95 @@
+"""Multi-worker serving runtime over the (optionally sharded) engine.
+
+``ServeRuntime`` spawns K worker threads, each with its own registered SMR
+``tid``, all driving ``ServeEngine.step`` concurrently:
+
+* worker A blocks on its device step's result (XLA releases the GIL and
+  the dispatch is async) while worker B plans and dispatches the next step
+  against a *disjoint* set of requests — the scheduler's ``inflight``
+  discipline guarantees no request is ever stepped twice concurrently, and
+  ``max_inflight`` era-reservation slots bound the pipeline depth;
+* each worker keeps its own scheduler stats dict (single-writer);
+  ``serve()`` returns the merged aggregate plus per-worker breakdowns;
+* shutdown is a graceful two-phase drain: workers exit when the queue and
+  active set are empty, then ONE era-progress-bounded ``engine.drain``
+  reclaims every retired block (provably terminating — see
+  ``ServeEngine.drain``; no magic round counts).
+
+The runtime enforces ``max_threads`` headroom at construction so every
+worker (and the drain) can register a tid; the wait-free scheme registry
+is per-shard-consistent (``ShardedBlockPool.register_thread``).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+from .engine import ServeEngine
+
+__all__ = ["ServeRuntime"]
+
+
+class ServeRuntime:
+    def __init__(self, engine: ServeEngine, *, n_workers: int = 2,
+                 max_steps_per_worker: int = 10_000):
+        if n_workers < 1:
+            raise ValueError("n_workers must be >= 1")
+        self.engine = engine
+        self.n_workers = n_workers
+        self.max_steps_per_worker = max_steps_per_worker
+        self.worker_steps: List[int] = [0] * n_workers
+        self.errors: List[BaseException] = []
+        self._tids: Optional[List[int]] = None
+        # set when any worker dies: its in-flight requests would otherwise
+        # stall the survivors' idle loops until max_steps before the error
+        # surfaced from serve()
+        self._stop = threading.Event()
+
+    # ---------------------------------------------------------------- workers
+    def _worker(self, wid: int, tid: int, barrier: threading.Barrier) -> None:
+        try:
+            barrier.wait()  # start together: contention from step one
+            self.worker_steps[wid] = self.engine.run_worker(
+                tid, self.max_steps_per_worker, stop=self._stop)
+        except BaseException as e:  # pragma: no cover - failure path
+            self.errors.append(e)
+            self._stop.set()  # abort the surviving workers promptly
+
+    def serve(self) -> Dict[str, object]:
+        """Run all submitted requests to completion; returns merged stats.
+
+        Spawns the workers, joins them once the queue and active set are
+        empty, then runs the final era-progress-bounded drain on one tid.
+        """
+        engine = self.engine
+        self._stop.clear()  # fresh run; serve() may be called repeatedly
+        if self._tids is None:  # one tid per worker, ever
+            self._tids = [engine.pool.register_thread()
+                          for _ in range(self.n_workers)]
+        barrier = threading.Barrier(self.n_workers)
+        t0 = time.perf_counter()
+        threads = [
+            threading.Thread(target=self._worker, args=(w, tid, barrier),
+                             name=f"serve-worker-{w}", daemon=True)
+            for w, tid in enumerate(self._tids)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        serve_dt = time.perf_counter() - t0  # tokens are all produced here
+        if self.errors:
+            raise self.errors[0]
+        # graceful drain: all workers are quiescent, every step completed
+        # and released its reservation — one bounded drain reclaims all
+        unreclaimed = engine.drain(self._tids[0])
+        dt = time.perf_counter() - t0
+        stats: Dict[str, object] = dict(engine.sched.stats)
+        stats["wall_s"] = serve_dt
+        stats["total_wall_s"] = dt
+        stats["unreclaimed"] = unreclaimed
+        stats["n_workers"] = self.n_workers
+        stats["worker_steps"] = list(self.worker_steps)
+        return stats

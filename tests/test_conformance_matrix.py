@@ -1,0 +1,238 @@
+"""Cross-scheme conformance matrix: every SMR scheme x every benchmark
+data structure under a 4-thread mixed workload.
+
+For each (scheme, structure) cell the test asserts *observable
+linearizability* at the granularity this harness can check
+deterministically:
+
+* key-value structures — each thread owns a disjoint key range and runs a
+  scripted insert/delete/get sequence against a local model; with a single
+  writer per key, every per-key history must linearize to the owner's
+  model, checked op-by-op and by a full sweep at quiescence.  Threads also
+  read each other's ranges to create cross-thread protection traffic (the
+  values read must never be poisoned payloads).
+* queues — 2 producers / 2 consumers; the dequeued multiset must equal the
+  enqueued multiset and each producer's items must come out in FIFO order
+  (per-producer subsequence property of a linearizable MPMC queue).
+* stack — 2 pushers / 2 poppers; popped ∪ residual = pushed multiset.
+
+And for every cell: **full reclamation at quiescence** — once all brackets
+close, repeated flushes must drain every retire list to exactly zero
+(plus-era ticks for the epoch schemes' grace periods).
+"""
+
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core import make_scheme
+from repro.core.datastructures import (CRTurnQueue, HarrisMichaelList,
+                                      KPQueue, MichaelHashMap, NatarajanBST,
+                                      TreiberStack)
+
+pytestmark = pytest.mark.stress
+
+SCHEMES = ("WFE", "HE", "HP", "EBR", "2GEIBR")
+KV_STRUCTS = {
+    "list": HarrisMichaelList,
+    "hashmap": MichaelHashMap,
+    "bst": NatarajanBST,
+}
+QUEUES = {"kp": KPQueue, "crturn": CRTurnQueue}
+
+N_THREADS = 4
+KEYS_PER_THREAD = 12
+OPS = 150
+
+
+def _smr(scheme, n=N_THREADS):
+    kw = ({"era_freq": 2, "cleanup_freq": 2} if scheme in ("WFE", "HE")
+          else {"epoch_freq": 2, "cleanup_freq": 2}
+          if scheme in ("EBR", "2GEIBR") else {"cleanup_freq": 2})
+    return make_scheme(scheme, max_threads=n, **kw)
+
+
+def _drain_to_zero(smr, rounds=100):
+    for tid in range(smr.max_threads):
+        smr.end_op(tid)
+    for _ in range(rounds):
+        if smr.unreclaimed() == 0:
+            return 0
+        for tid in range(smr.max_threads):
+            smr.advance_era(tid)
+            smr.flush(tid)
+    return smr.unreclaimed()
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("name", sorted(KV_STRUCTS))
+def test_kv_matrix_mixed_workload(name, scheme):
+    smr = _smr(scheme)
+    ds = KV_STRUCTS[name](smr)
+    start = threading.Barrier(N_THREADS)
+    errors = []
+    models = [dict() for _ in range(N_THREADS)]
+
+    def worker(w):
+        tid = smr.register_thread()
+        lo = w * KEYS_PER_THREAD
+        model = models[w]
+        r = random.Random(1000 + w)
+        start.wait()
+        try:
+            for i in range(OPS):
+                key = lo + r.randrange(KEYS_PER_THREAD)
+                op = r.random()
+                if op < 0.4:
+                    want = key not in model
+                    assert ds.insert(key, (w, i), tid) == want, \
+                        (name, scheme, "insert", key)
+                    model.setdefault(key, (w, i))
+                elif op < 0.7:
+                    assert ds.delete(key, tid) == (key in model), \
+                        (name, scheme, "delete", key)
+                    model.pop(key, None)
+                else:
+                    assert ds.get(key, tid) == model.get(key), \
+                        (name, scheme, "get", key)
+                if i % 7 == 0:
+                    # cross-thread read traffic: someone else's range; the
+                    # value is racy but must never be a poisoned payload
+                    other = ((w + 1) % N_THREADS) * KEYS_PER_THREAD \
+                        + r.randrange(KEYS_PER_THREAD)
+                    got = ds.get(other, tid)
+                    assert got is None or isinstance(got, tuple), \
+                        (name, scheme, "cross-read saw poison", got)
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    assert not errors, errors[0]
+    # quiescent sweep: the union of the per-owner models IS the structure
+    tid = 0
+    for w in range(N_THREADS):
+        for key in range(w * KEYS_PER_THREAD, (w + 1) * KEYS_PER_THREAD):
+            assert ds.get(key, tid) == models[w].get(key), \
+                (name, scheme, "final", key)
+    smr.clear(tid)
+    left = _drain_to_zero(smr)
+    assert left == 0, f"{name}/{scheme}: {left} blocks unreclaimed"
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("name", sorted(QUEUES))
+def test_queue_matrix_mpmc(name, scheme):
+    smr = _smr(scheme)
+    q = QUEUES[name](smr)
+    n_items = 120
+    start = threading.Barrier(N_THREADS)
+    errors = []
+    popped = [list() for _ in range(2)]
+    done = threading.Event()
+
+    def producer(p):
+        tid = smr.register_thread()
+        start.wait()
+        for i in range(n_items):
+            q.enqueue(p * 10_000 + i, tid)
+
+    def consumer(c):
+        tid = smr.register_thread()
+        start.wait()
+        try:
+            while not done.is_set():
+                got = q.dequeue(tid)
+                if got is not None:
+                    popped[c].append(got)
+                    if sum(len(x) for x in popped) >= 2 * n_items:
+                        done.set()
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    producers = [threading.Thread(target=producer, args=(p,))
+                 for p in range(2)]
+    consumers = [threading.Thread(target=consumer, args=(c,))
+                 for c in range(2)]
+    for t in producers + consumers:
+        t.start()
+    for t in producers:
+        t.join(timeout=300)
+    # producers done: wait (bounded wall-clock) for consumers to drain
+    deadline = time.monotonic() + 120
+    while (sum(len(x) for x in popped) < 2 * n_items
+           and time.monotonic() < deadline):
+        done.wait(0.01)
+    done.set()
+    for t in consumers:
+        t.join(timeout=300)
+    assert not errors, errors[0]
+    got = sorted(popped[0] + popped[1])
+    want = sorted(p * 10_000 + i for p in range(2) for i in range(n_items))
+    assert got == want, (name, scheme, "dequeue multiset mismatch")
+    # linearizable MPMC FIFO: each producer's items appear in order within
+    # each consumer's local sequence
+    for c in range(2):
+        for p in range(2):
+            sub = [v for v in popped[c] if v // 10_000 == p]
+            assert sub == sorted(sub), (name, scheme, "per-producer order")
+    assert q.dequeue(0) is None
+    left = _drain_to_zero(smr)
+    assert left == 0, f"{name}/{scheme}: {left} blocks unreclaimed"
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_stack_matrix_concurrent(scheme):
+    smr = _smr(scheme)
+    s = TreiberStack(smr)
+    n_items = 150
+    start = threading.Barrier(N_THREADS)
+    errors = []
+    popped = [list() for _ in range(2)]
+    stop = threading.Event()
+
+    def pusher(p):
+        tid = smr.register_thread()
+        start.wait()
+        for i in range(n_items):
+            s.push(p * 10_000 + i, tid)
+
+    def popper(c):
+        tid = smr.register_thread()
+        start.wait()
+        try:
+            while not stop.is_set():
+                got = s.pop(tid)
+                if got is not None:
+                    popped[c].append(got)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    pushers = [threading.Thread(target=pusher, args=(p,)) for p in range(2)]
+    poppers = [threading.Thread(target=popper, args=(c,)) for c in range(2)]
+    for t in pushers + poppers:
+        t.start()
+    for t in pushers:
+        t.join(timeout=300)
+    stop.set()
+    for t in poppers:
+        t.join(timeout=300)
+    assert not errors, errors[0]
+    residual = []
+    tid = 0
+    while True:
+        got = s.pop(tid)
+        if got is None:
+            break
+        residual.append(got)
+    got_all = sorted(popped[0] + popped[1] + residual)
+    want = sorted(p * 10_000 + i for p in range(2) for i in range(n_items))
+    assert got_all == want, (scheme, "push/pop multiset mismatch")
+    left = _drain_to_zero(smr)
+    assert left == 0, f"stack/{scheme}: {left} blocks unreclaimed"

@@ -1,0 +1,224 @@
+"""Sharded multi-worker serving runtime tests.
+
+Covers the ISSUE-2 tentpole surface:
+
+* `ServeEngine.drain` terminates with ``unreclaimed() == 0`` for all four
+  pool schemes (the bug class the old magic 64-round loop papered over);
+* sharded engines generate EXACTLY the same tokens as unsharded ones
+  (request-level sharding must not change decode results);
+* the multi-worker `ServeRuntime` completes every request with correct
+  tokens, merged per-worker stats, and full reclamation at quiescence;
+* `ShardedBlockPool` safety: cross-shard protection, home-shard retire
+  routing, era-clock max-merge monotonicity (`ShardedEraDomain`).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.blocks import BlockPool, ShardedBlockPool
+from repro.configs import get_smoke_config
+from repro.core.distributed_eras import ShardedEraDomain
+from repro.models import build_model
+from repro.serve import ServeEngine, ServeRuntime
+
+POOL_SCHEMES = ("WFE", "HE", "EBR", "2GEIBR")
+PROMPTS = [[5, 9, 2], [11, 3, 8, 1], [7], [2, 4], [9, 9, 1], [13]]
+N_NEW = 5
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = get_smoke_config("stablelm-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def reference_tokens(dense_model):
+    """Unsharded single-worker engine output = the ground truth."""
+    cfg, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
+                         era_freq=1, cleanup_freq=1)
+    tid = engine.pool.register_thread()
+    reqs = [engine.submit(p, N_NEW) for p in PROMPTS]
+    engine.run(tid)
+    assert all(r.done for r in reqs)
+    return [list(r.generated) for r in reqs]
+
+
+# ============================================================ drain
+@pytest.mark.parametrize("scheme", POOL_SCHEMES)
+def test_engine_drain_terminates_all_schemes(dense_model, scheme):
+    """Final drain reaches unreclaimed() == 0 without magic round counts."""
+    cfg, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
+                         scheme=scheme, era_freq=2, cleanup_freq=2)
+    tid = engine.pool.register_thread()
+    reqs = [engine.submit(p, N_NEW) for p in PROMPTS[:4]]
+    stats = engine.run(tid)
+    assert stats["completed"] == 4
+    assert all(r.done for r in reqs)
+    assert engine.pool.unreclaimed() == 0, \
+        f"{scheme}: drain left retired blocks unreclaimed"
+    assert engine.pool.free_blocks == 32, f"{scheme}: pool slots leaked"
+
+
+def test_engine_drain_bounded_under_live_reservation(dense_model):
+    """A still-held reservation must make drain RETURN (bounded), not spin."""
+    cfg, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=16, block_size=4,
+                         era_freq=1, cleanup_freq=1)
+    t0 = engine.pool.register_thread()
+    t1 = engine.pool.register_thread()
+    blk = engine.pool.alloc(t0)
+    engine.pool.protect_step(0, t1)  # a live in-flight reservation
+    engine.pool.retire(blk, t0)
+    left = engine.drain(t0)  # must terminate despite the pinned block
+    assert left == 1, "pinned block should survive the bounded drain"
+    engine.pool.release_step(0, t1)
+    assert engine.drain(t0) == 0
+
+
+# ============================================================ sharded engine
+def test_sharded_engine_matches_unsharded(dense_model, reference_tokens):
+    """Request-level sharding changes placement, never tokens."""
+    cfg, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
+                         n_shards=2, era_freq=1, cleanup_freq=1)
+    tid = engine.pool.register_thread()
+    reqs = [engine.submit(p, N_NEW) for p in PROMPTS]
+    stats = engine.run(tid)
+    assert stats["completed"] == len(PROMPTS)
+    for req, want in zip(reqs, reference_tokens):
+        assert req.generated == want, (req.rid, req.generated, want)
+    assert engine.pool.unreclaimed() == 0
+    assert engine.pool.free_blocks == 32
+    # both shards actually hosted requests
+    shards_used = {r.shard for r in reqs}
+    assert shards_used == {0, 1}
+
+
+def test_multi_worker_runtime_correct_and_reclaimed(dense_model,
+                                                    reference_tokens):
+    """K workers over a sharded pool: same tokens, merged stats, no leaks."""
+    cfg, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
+                         n_shards=2, max_threads=8, max_inflight=6,
+                         era_freq=2, cleanup_freq=2)
+    reqs = [engine.submit(p, N_NEW) for p in PROMPTS]
+    runtime = ServeRuntime(engine, n_workers=3)
+    stats = runtime.serve()
+    assert stats["completed"] == len(PROMPTS)
+    assert stats["unreclaimed"] == 0
+    for req, want in zip(reqs, reference_tokens):
+        assert req.generated == want, (req.rid, req.generated, want)
+    assert engine.pool.free_blocks == 32, "runtime leaked pool slots"
+    # per-worker stats are single-writer dicts merged at aggregation: no
+    # lost updates — the merged counters must account for every request
+    merged = engine.sched.stats
+    assert merged["admitted"] >= len(PROMPTS)
+    assert merged["steps"] == sum(
+        st["steps"] for st in engine.sched._worker_stats.values())
+
+
+def test_multi_worker_runtime_wfe_forced_slow_path(dense_model):
+    """Concurrent workers with WFE's slow path forced end-to-end."""
+    cfg, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
+                         n_shards=2, max_threads=8, era_freq=1,
+                         cleanup_freq=1, max_attempts=1)
+    reqs = [engine.submit([3, 1, 4], 4) for _ in range(4)]
+    stats = ServeRuntime(engine, n_workers=2).serve()
+    assert stats["completed"] == 4
+    assert all(r.done for r in reqs)
+    assert stats["unreclaimed"] == 0
+    slow = sum(sum(smr.slow_path_count) for smr in engine.pool.smrs)
+    assert slow > 0, "forced slow path never taken"
+
+
+# ============================================================ sharded pool
+def test_sharded_pool_routing_and_reclamation():
+    pool = ShardedBlockPool(12, n_shards=3, max_threads=4,
+                            era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    # pinned allocation stays in range
+    for s in range(3):
+        blk = pool.alloc(tid, shard=s)
+        base = pool.shards[s].first_block
+        assert base <= blk.index < base + pool.shards[s].n_blocks
+        assert blk.home_shard == s
+        pool.retire(blk, tid)
+    # unpinned allocation steals across shards under pressure
+    blks = [pool.alloc(tid) for _ in range(9)]
+    assert len({b.home_shard for b in blks}) == 3
+    for b in blks:
+        pool.retire(b, tid)
+    for _ in range(8):
+        pool.cleanup_all()
+        pool.advance_eras(tid)
+    assert pool.unreclaimed() == 0
+    assert pool.free_blocks == 12
+
+
+def test_sharded_pool_cross_shard_protection():
+    """A step reservation published per shard pins every shard's blocks."""
+    pool = ShardedBlockPool(8, n_shards=2, max_threads=4,
+                            era_freq=1, cleanup_freq=1)
+    t0 = pool.register_thread()
+    t1 = pool.register_thread()
+    blks = [pool.alloc(t0, shard=s) for s in range(2)]
+    pool.protect_step(0, t1)  # unpinned step: reserves in BOTH shards
+    for b in blks:
+        pool.retire(b, t0)
+    for _ in range(8):
+        pool.cleanup_all()
+        pool.advance_eras(t0)
+    assert all(not b.freed for b in blks), "reservation failed to pin"
+    pool.release_step(0, t1)
+    for _ in range(8):
+        pool.cleanup_all()
+        pool.advance_eras(t0)
+    assert all(b.freed for b in blks)
+
+
+def test_sharded_pool_shard_pinned_protection():
+    """A shard-pinned step reserves only its own shard's clock."""
+    pool = ShardedBlockPool(8, n_shards=2, max_threads=4,
+                            era_freq=1, cleanup_freq=1)
+    t0 = pool.register_thread()
+    t1 = pool.register_thread()
+    b0 = pool.alloc(t0, shard=0)
+    b1 = pool.alloc(t0, shard=1)
+    pool.protect_step(0, t1, shard=0)  # pin shard 0 only
+    pool.retire(b0, t0)
+    pool.retire(b1, t0)
+    for _ in range(8):
+        pool.cleanup_all()
+        pool.advance_eras(t0)
+    assert not b0.freed, "shard-0 reservation failed to pin"
+    assert b1.freed, "shard-1 block should reclaim (no reservation there)"
+    pool.release_step(0, t1, shard=0)
+    for _ in range(8):
+        pool.cleanup_all()
+        pool.advance_eras(t0)
+    assert b0.freed
+
+
+# ============================================================ era domain
+def test_sharded_era_domain_monotone_merge():
+    smrs = [ShardedBlockPool(4, n_shards=1, max_threads=2).shards[0].smr
+            for _ in range(3)]
+    dom = ShardedEraDomain(smrs)
+    # skew the clocks
+    smrs[0].global_era.fa_add(10)
+    smrs[2].global_era.fa_add(3)
+    before = dom.locals
+    m = dom.merge_all()
+    assert m == max(before)
+    assert dom.spread() == 0, "merge must equalize to the fleet max"
+    assert all(after >= b for after, b in zip(dom.locals, before)), \
+        "merge regressed a clock"
+    # merging a stale maximum never regresses
+    assert dom.merge_all() >= m

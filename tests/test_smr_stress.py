@@ -1,0 +1,208 @@
+"""Concurrency stress suite for the SMR schemes (``pytest -m stress``).
+
+The paper's progress and safety claims are only meaningful under real
+multi-thread contention, so these tests hammer the schemes with 8+ threads
+and — for WFE — ``max_attempts=1``, which forces the slow path on every
+protected dereference (paper §5: "forcing the slow path to be taken all
+the time").  Asserted invariants:
+
+* **no use-after-free**: the poisoning ``free()`` makes any unsafe
+  reclamation visible — a protected reader must never observe
+  ``freed`` / poisoned payload;
+* **helping works**: under forced slow path with concurrent era advancers,
+  some requests must be completed by helpers (``helped_count > 0``);
+* **bounded memory**: for schemes claiming ``bounded_memory``, the sampled
+  retired-but-unreclaimed population stays under a c·T²·H-style bound and
+  drains to exactly zero at quiescence.
+
+Run for every scheme that claims ``wait_free`` or ``bounded_memory``.
+"""
+
+import threading
+
+import pytest
+
+from repro.core import SCHEMES, Block, make_scheme
+from repro.core.atomics import AtomicRef, PtrView
+from repro.core.wfe import WFE
+
+pytestmark = pytest.mark.stress
+
+#: every scheme whose paper-level contract this suite must hold against
+STRESS_SCHEMES = sorted(
+    name for name, cls in SCHEMES.items()
+    if cls.wait_free or cls.bounded_memory)
+
+N_THREADS = 8
+OPS = 250
+N_CELLS = 4
+
+
+class _Node(Block):
+    __slots__ = ("payload",)
+
+    def __init__(self, payload):
+        super().__init__()
+        self.payload = payload
+
+    def _poison_payload(self):
+        self.payload = None
+
+
+def _make(name: str, max_threads: int, force_slow: bool = False):
+    kw = {}
+    if name in ("WFE", "HE"):
+        kw = {"era_freq": 1, "cleanup_freq": 1}
+    elif name in ("EBR", "2GEIBR"):
+        kw = {"epoch_freq": 1, "cleanup_freq": 1}
+    elif name == "HP":
+        kw = {"cleanup_freq": 1}
+    if force_slow and name == "WFE":
+        kw["max_attempts"] = 1  # slow path on every get_protected
+    return make_scheme(name, max_threads=max_threads, **kw)
+
+
+def _hammer(smr, *, n_threads=N_THREADS, ops=OPS):
+    """n_threads, each mixing protected reads with CAS-swap-and-retire.
+
+    Returns (errors, max_unreclaimed_sampled, total_retired).
+    """
+    cells = [AtomicRef(None) for _ in range(N_CELLS)]
+    views = [PtrView(c) for c in cells]
+    start = threading.Barrier(n_threads)
+    errors = []
+    peak = [0] * n_threads
+
+    def worker(widx):
+        tid = smr.register_thread()
+        # seed this thread's cell so every cell is non-null early
+        seed = smr.alloc_block(_Node, tid, (tid, -1))
+        cells[widx % N_CELLS].cas(None, seed)
+        start.wait()
+        try:
+            for i in range(ops):
+                c = (widx + i) % N_CELLS
+                smr.start_op(tid)
+                blk = smr.get_protected(views[c], 0, tid)
+                if blk is not None:
+                    # UAF check: protection must keep the block readable
+                    assert not blk.freed, "reader observed a freed block"
+                    assert blk.payload is not None, \
+                        "reader observed a poisoned payload"
+                    if i % 3 == widx % 3:
+                        new = smr.alloc_block(_Node, tid, (tid, i))
+                        # identity CAS: exactly one swapper retires `blk`
+                        if cells[c].cas(blk, new):
+                            smr.retire(blk, tid)
+                smr.end_op(tid)
+                if i % 16 == 0:
+                    peak[widx] = max(peak[widx], smr.unreclaimed())
+        except Exception as e:  # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    return errors, max(peak), sum(smr.retire_count)
+
+
+def _drain(smr, rounds=100):
+    for tid in range(smr.max_threads):
+        smr.end_op(tid)
+    for _ in range(rounds):
+        if smr.unreclaimed() == 0:
+            break
+        for tid in range(smr.max_threads):
+            smr.advance_era(tid)
+            smr.flush(tid)
+    return smr.unreclaimed()
+
+
+@pytest.mark.parametrize("name", STRESS_SCHEMES)
+def test_stress_no_uaf_and_bounded(name):
+    smr = _make(name, N_THREADS, force_slow=True)
+    errors, peak, retired = _hammer(smr)
+    assert not errors, errors[0]
+    assert retired > 0, "workload never exercised retirement"
+    if SCHEMES[name].bounded_memory:
+        # generous c.T^2.H-style bound (paper Thm. 4 shape): stalled-free
+        # runs stay far below it; unbounded growth would blow through it
+        h = getattr(smr, "max_hes", getattr(smr, "max_hps", 1))
+        bound = 4 * N_THREADS * (N_THREADS * h + 64)
+        assert peak <= bound, f"{name}: unreclaimed peaked at {peak} > {bound}"
+        assert _drain(smr) == 0, f"{name}: blocks leaked at quiescence"
+
+
+def test_stress_wfe_forced_slow_path_helping():
+    """8 threads, max_attempts=1: the helping protocol must actually fire.
+
+    Whether a given request self-completes or is served by a helper is a
+    scheduling race, so one hammer round may legitimately see zero helps;
+    across a handful of rounds a live helping path fires with certainty
+    while a dead one never does.
+    """
+    slow = helped = 0
+    for _ in range(6):
+        smr = _make("WFE", N_THREADS, force_slow=True)
+        errors, peak, _ = _hammer(smr)
+        assert not errors, errors[0]
+        slow += sum(smr.slow_path_count)
+        helped += sum(smr.helped_count)
+        assert _drain(smr) == 0, "WFE leaked blocks at quiescence"
+        if helped:
+            break
+    assert slow > 0, "slow path never taken"
+    assert helped > 0, \
+        "no request was ever served by a helper (helping machinery dead)"
+
+
+def test_stress_wfe_era_advancers_vs_slow_path():
+    """Era advancers (retire-heavy threads) vs forced-slow-path readers:
+    the combination that exercises help_thread's hand-over WCAS."""
+    smr = WFE(max_threads=N_THREADS, max_attempts=1, era_freq=1,
+              cleanup_freq=1)
+    cell = AtomicRef(None)
+    view = PtrView(cell)
+    start = threading.Barrier(N_THREADS)
+    stop = threading.Event()
+    errors = []
+
+    def advancer():
+        tid = smr.register_thread()
+        cur = smr.alloc_block(_Node, tid, 0)
+        cell.cas(None, cur)
+        start.wait()
+        for i in range(OPS):
+            new = smr.alloc_block(_Node, tid, i)
+            old = cell.load()
+            if old is not None and cell.cas(old, new):
+                smr.retire(old, tid)
+        stop.set()
+
+    def reader():
+        tid = smr.register_thread()
+        start.wait()
+        try:
+            ops = 0
+            while not stop.is_set() or ops < 20:
+                blk = smr.get_protected(view, 0, tid)
+                if blk is not None:
+                    assert not blk.freed
+                smr.clear(tid)
+                ops += 1
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = ([threading.Thread(target=advancer) for _ in range(2)]
+               + [threading.Thread(target=reader)
+                  for _ in range(N_THREADS - 2)])
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    assert not errors, errors[0]
+    assert sum(smr.slow_path_count) > 0
+    assert _drain(smr) == 0
