@@ -1,7 +1,7 @@
 """Serving-engine benchmark: WFE pool vs other SMR schemes under the
 continuous-batching engine (the paper's technique in its integrated home).
 
-Two modes:
+Modes:
 
 * ``run()`` — the original single-worker scheme comparison: scheduler-side
   tail latencies of tick() (admission+alloc+protect) — the operations the
@@ -13,11 +13,25 @@ Two modes:
   instances joined by the distributed era clock.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --workers 4 --shards 4
+
+* ``run_prefill_heavy()`` / ``--prefill-heavy`` — the chunked-prefill
+  scenario: long prompts, few generated tokens.  Reports TTFT and TPOT
+  (definitions in docs/benchmarks.md) for token-at-a-time prompt
+  processing (chunk_size=1 — one device dispatch per prompt token) vs
+  chunked prefill (``--chunk-size`` tokens per dispatch), plus the TTFT
+  speedup.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --prefill-heavy --chunk-size 32
+
+* ``--smoke`` — a seconds-scale tiny-config prefill-heavy pass for CI,
+  emitting the TTFT/TPOT JSON schema (``--json PATH``) the bench
+  trajectory expects.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -58,6 +72,24 @@ def _build_bench(arch: str = "stablelm-3b"):
     return cfg, params
 
 
+def latency_summary(reqs) -> dict:
+    """TTFT/TPOT percentiles (ms) over finished requests.
+
+    TTFT = submit -> first generated token; TPOT = mean per-token gap over
+    the remaining generated tokens (see docs/benchmarks.md).
+    """
+    def pct(xs):
+        if not xs:
+            return {"p50_ms": None, "p95_ms": None, "mean_ms": None}
+        a = np.asarray(xs) * 1e3
+        return {"p50_ms": float(np.percentile(a, 50)),
+                "p95_ms": float(np.percentile(a, 95)),
+                "mean_ms": float(a.mean())}
+    return {"ttft": pct([r.ttft for r in reqs if r.ttft is not None]),
+            "tpot": pct([r.tpot for r in reqs if r.tpot is not None]),
+            "n_requests": len(reqs)}
+
+
 def run(n_requests: int = 12, new_tokens: int = 8):
     cfg, params = _build_base()
     out = {}
@@ -72,7 +104,6 @@ def run(n_requests: int = 12, new_tokens: int = 8):
         for i in range(n_requests):
             engine.submit([1 + i % 7, 2, 3], new_tokens)
         tick_times = []
-        tokens = 0
         t0 = time.perf_counter()
         while True:
             t1 = time.perf_counter()
@@ -82,15 +113,9 @@ def run(n_requests: int = 12, new_tokens: int = 8):
                 if not engine.sched.active and not engine.sched.queue:
                     break
                 continue
-            import jax.numpy as jnp
-            logits, engine.pools = engine._step(
-                engine.params, engine.pools, jnp.asarray(plan.tables),
-                jnp.asarray(plan.lengths), jnp.asarray(plan.tokens),
-                jnp.asarray(plan.positions))
-            sampled = np.asarray(jnp.argmax(logits, axis=-1))
-            engine.sched.complete(plan, sampled, tid)
-            tokens += len(plan.requests)
+            engine.execute_plan(plan, tid)
         dt = time.perf_counter() - t0
+        tokens = engine.sched.stats["completed"] * new_tokens
         engine.drain(tid)
         ticks_us = np.array(tick_times) * 1e6
         stats = engine.pool.stats()
@@ -106,6 +131,80 @@ def run(n_requests: int = 12, new_tokens: int = 8):
               f"{row['tick_p50_us']:>12.1f} {row['tick_p99_us']:>12.1f} "
               f"{row['unreclaimed']:>12d} {row['slow_paths']:>11d}")
     return out
+
+
+# ------------------------------------------------------- prefill-heavy TTFT
+def run_prefill_heavy(chunk_size: int = 32, prompt_len: int = 96,
+                      n_requests: int = 8, new_tokens: int = 4,
+                      block_size: int = 8, scheme: str = "WFE",
+                      build=_build_base) -> dict:
+    """Chunked prefill vs token-at-a-time on a prefill-heavy workload.
+
+    Long prompts + short generations make prompt materialization the
+    dominant latency term: token-at-a-time costs P device dispatches
+    before the first token, chunked prefill ceil(P/C).  Each engine gets
+    one untimed warmup pass (compiles every chunk/table-width bucket) and
+    one timed pass; TTFT/TPOT come from the requests' monotonic stamps.
+    """
+    cfg, params = build()
+    n_blocks = n_requests * (-(-(prompt_len + new_tokens) // block_size)) + 8
+    out: dict = {"prompt_len": prompt_len, "new_tokens": new_tokens,
+                 "chunk_size": chunk_size, "scheme": scheme}
+    print(f"\n### Prefill-heavy serving: P={prompt_len} prompt tokens, "
+          f"{new_tokens} generated, chunk C={chunk_size} ({scheme})")
+    print(f"{'mode':>18s} {'ttft p50 ms':>12s} {'ttft p95 ms':>12s} "
+          f"{'tpot p50 ms':>12s} {'tok/s':>8s} {'dispatches':>11s}")
+    for label, c in (("token_at_a_time", 1), ("chunked", chunk_size)):
+        engine = ServeEngine(cfg, params, n_blocks=n_blocks,
+                             block_size=block_size, max_batch=4,
+                             scheme=scheme, chunk_size=c,
+                             era_freq=8, cleanup_freq=8)
+        tid = engine.pool.register_thread()
+
+        def prompts():
+            return [[1 + (i * 7 + j) % 31 for j in range(prompt_len)]
+                    for i in range(n_requests)]
+
+        for p in prompts():  # warmup: compiles every shape bucket
+            engine.submit(p, new_tokens)
+        engine.run(tid)
+        before = dict(engine.sched.stats)  # counters are cumulative
+        reqs = [engine.submit(p, new_tokens) for p in prompts()]
+        t0 = time.perf_counter()
+        engine.run(tid)
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        after = engine.sched.stats
+        row = latency_summary(reqs)
+        row["tok_s"] = n_requests * new_tokens / dt
+        row["dispatches"] = after["steps"] - before["steps"]
+        row["prefill_chunks"] = (after["prefill_chunks"]
+                                 - before["prefill_chunks"])
+
+        def fmt(x):  # tpot is None when new_tokens < 2
+            return f"{x:>12.1f}" if x is not None else f"{'-':>12s}"
+
+        out[label] = row
+        print(f"{label:>18s} {fmt(row['ttft']['p50_ms'])} "
+              f"{fmt(row['ttft']['p95_ms'])} {fmt(row['tpot']['p50_ms'])} "
+              f"{row['tok_s']:>8.1f} {row['dispatches']:>11d}")
+    base, chunked = out["token_at_a_time"], out["chunked"]
+    out["ttft_speedup"] = base["ttft"]["p50_ms"] / chunked["ttft"]["p50_ms"]
+    print(f"TTFT speedup (p50): {out['ttft_speedup']:.2f}x  "
+          f"[{'PASS' if out['ttft_speedup'] > 1 else 'FAIL'}: chunked "
+          f"prefill must cut time-to-first-token]")
+    return out
+
+
+def run_smoke(chunk_size: int = 8) -> dict:
+    """Seconds-scale CI smoke: tiny config, short prompts, same schema."""
+    return {
+        "schema": "serve_bench/ttft_tpot/v1",
+        "mode": "smoke",
+        "prefill_heavy": run_prefill_heavy(
+            chunk_size=chunk_size, prompt_len=24, n_requests=4,
+            new_tokens=3, block_size=4),
+    }
 
 
 # ------------------------------------------------------------- scaling matrix
@@ -207,25 +306,60 @@ def main(argv=None) -> int:
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--schemes", nargs="*",
                     default=["WFE", "HE", "EBR", "2GEIBR"])
-    ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    # None = per-mode default (64/16 for the scaling matrix, 8/4 for the
+    # prefill-heavy scenario) — a value-equality sentinel could not tell
+    # an explicit 64 from the default
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--new-tokens", type=int, default=None)
     ap.add_argument("--n-blocks", type=int, default=512)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="prefill chunk token budget (C) for the "
+                         "prefill-heavy scenario")
+    ap.add_argument("--prompt-len", type=int, default=96,
+                    help="prompt length (P) for the prefill-heavy scenario")
+    ap.add_argument("--prefill-heavy", action="store_true",
+                    help="run the chunked-prefill TTFT/TPOT scenario "
+                         "instead of the scaling matrix")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI pass: tiny config, emits the "
+                         "TTFT/TPOT JSON schema")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the structured results as JSON")
     ap.add_argument("--smoke-model", action="store_true",
                     help="use the tiny smoke config instead of the scaled "
                          "bench model (interpreter-bound; scaling flattens)")
     ap.add_argument("--latency", action="store_true",
                     help="also run the single-worker tick-latency suite")
     args = ap.parse_args(argv)
-    if args.latency:
-        run()
-    run_scaling(workers=args.workers, shards=args.shards,
-                schemes=tuple(args.schemes), n_requests=args.requests,
-                new_tokens=args.new_tokens, n_blocks=args.n_blocks,
-                max_batch=args.max_batch, reps=args.reps,
-                build=_build_base if args.smoke_model else _build_bench)
-    return 0
+    if args.smoke:
+        results = run_smoke(chunk_size=min(args.chunk_size, 8))
+        ok = results["prefill_heavy"]["ttft_speedup"] > 1.0
+    elif args.prefill_heavy:
+        results = {"schema": "serve_bench/ttft_tpot/v1"}
+        results["prefill_heavy"] = run_prefill_heavy(
+            chunk_size=args.chunk_size, prompt_len=args.prompt_len,
+            n_requests=args.requests or 8,
+            new_tokens=args.new_tokens or 4)
+        ok = results["prefill_heavy"]["ttft_speedup"] > 1.0
+    else:
+        if args.latency:
+            run()
+        scaling = run_scaling(
+            workers=args.workers, shards=args.shards,
+            schemes=tuple(args.schemes), n_requests=args.requests or 64,
+            new_tokens=args.new_tokens or 16, n_blocks=args.n_blocks,
+            max_batch=args.max_batch, reps=args.reps,
+            build=_build_base if args.smoke_model else _build_bench)
+        results = {"schema": "serve_bench/scaling/v1", "scaling": {
+            f"{sc}_w{w}_s{s}": row for (sc, w, s), row in scaling.items()}}
+        ok = True
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.json}")
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -153,18 +153,40 @@ class BlockPool:
         ``shard`` is accepted for interface parity with the sharded pool
         (an unsharded pool is its own single shard).
         """
-        idx = self._free.pop()
-        if idx is None:
-            # drain our own retire list, then retry once
-            self.cleanup(tid)
+        return self.alloc_blocks(1, tid)[0]
+
+    def alloc_blocks(self, n: int, tid: int,
+                     shard: Optional[int] = None) -> List[KVBlock]:
+        """Bulk allocation of ``n`` pool slots — all or nothing.
+
+        A chunked-prefill step materializes many pages at once; grabbing
+        them in one call amortizes the free-stack traffic and, critically,
+        is atomic under pressure: if fewer than ``n`` slots are free even
+        after draining our retire list, every popped slot is pushed back
+        (the raw indices were never wrapped in a reclamation header, so
+        the rollback is a plain stack push) and ``PoolExhausted`` is
+        raised — the scheduler then evicts and retries, or shrinks the
+        chunk to the pages the request already owns.
+        """
+        idxs: List[int] = []
+        for _ in range(n):
             idx = self._free.pop()
             if idx is None:
+                # drain our own retire list, then retry once
+                self.cleanup(tid)
+                idx = self._free.pop()
+            if idx is None:
+                for i in idxs:
+                    self._free.push(i)
                 raise PoolExhausted(
-                    f"pool of {self.n_blocks} blocks exhausted")
-        blk = self.smr.alloc_block(KVBlock, tid, idx, self._on_free)
+                    f"pool of {self.n_blocks} blocks exhausted "
+                    f"({len(idxs)} of {n} requested slots free)")
+            idxs.append(idx)
+        blks = [self.smr.alloc_block(KVBlock, tid, i, self._on_free)
+                for i in idxs]
         with self._lock_gauge:
-            self._free_count -= 1
-        return blk
+            self._free_count -= n
+        return blks
 
     def _on_free(self, index: int) -> None:
         self._free.push(index)

@@ -58,13 +58,23 @@ class BlockTableRef:
 
     def append_block(self, tid: int) -> KVBlock:
         """Allocate a pool block and publish a new table version."""
-        blk = self._pool.alloc(tid, shard=self.shard)
+        return self.append_blocks(tid, 1)[0]
+
+    def append_blocks(self, tid: int, n: int) -> List[KVBlock]:
+        """Bulk-append ``n`` blocks under ONE new table version.
+
+        The chunked-prefill planner allocates every page a chunk needs in
+        one shot (``BlockPool.alloc_blocks`` — atomic under pressure), and
+        publishing a single version for all of them retires one node
+        instead of n: version churn stays O(chunks), not O(blocks).
+        """
+        blks = self._pool.alloc_blocks(n, tid, shard=self.shard)
         old = self._ref.load()
         new = self._pool.alloc_node(
-            TableVersion, tid, old.blocks + (blk,), shard=self.shard)
+            TableVersion, tid, old.blocks + tuple(blks), shard=self.shard)
         self._ref.store(new)  # single writer per request (the scheduler)
         self._pool.retire_node(old, tid)
-        return blk
+        return blks
 
     def release_all(self, tid: int) -> None:
         """Retire every block + the table itself (request finished/evicted)."""

@@ -12,6 +12,18 @@ protection are all wait-free-bounded WFE operations, so
   keep their block-table snapshots readable until completion via one era
   reservation per step (``protect_step``).
 
+Chunked-prefill planning: ``tick`` is a token-budget planner emitting TYPED
+step plans — a *decode* batch (one token per decode-phase request, up to
+``max_batch``) or a *prefill* chunk (up to ``chunk_size`` prompt tokens of
+ONE request, with every needed page bulk-allocated up front via
+``BlockTableRef.append_blocks``).  A P-token prompt therefore costs
+``ceil(P / chunk_size)`` device dispatches instead of P decode steps.  The
+era discipline is unchanged and is exactly what makes bulk page access
+cheap: ONE interval reservation per step protects however many blocks the
+chunk touches (the paper's amortize-protection-over-many-accesses argument;
+cf. DEBRA / Crystalline).  Prefill chunks are planned before decode batches
+(TTFT-first); both kinds draw from the same ``max_inflight`` slot budget.
+
 Multi-worker discipline (the sharded serving runtime): several worker
 threads drive ``tick``/``complete`` concurrently.  Scheduling state (the
 active list, in-flight slots, request bookkeeping) is guarded by one
@@ -42,7 +54,8 @@ __all__ = ["Request", "StepPlan", "Scheduler"]
 
 #: every per-worker stats dict carries these keys (merged by ``stats``)
 STAT_KEYS = ("admitted", "completed", "evictions", "steps",
-             "deadline_cutoffs", "reclaimed")
+             "deadline_cutoffs", "reclaimed", "prefill_chunks",
+             "prefill_tokens")
 
 
 @dataclass
@@ -52,15 +65,31 @@ class Request:
     max_new_tokens: int
     generated: List[int] = field(default_factory=list)
     table: Optional[BlockTableRef] = None
-    length: int = 0  # tokens materialized in the cache
+    length: int = 0  # prefill cursor: tokens materialized in the cache
     state: str = "queued"  # queued | active | done | evicted
     evictions: int = 0
     inflight: bool = False  # a device step for this request is outstanding
     shard: int = 0  # pool/device shard this request's pages live in
+    # latency stamps (time.monotonic): TTFT = t_first - t_submit,
+    # TPOT = (t_last - t_first) / (len(generated) - 1)
+    t_submit: float = 0.0
+    t_first: Optional[float] = None
+    t_last: Optional[float] = None
+
+    @property
+    def phase(self) -> str:
+        """``prefill`` while prompt tokens remain unmaterialized (the
+        cursor is ``length``; eviction resets it to 0), else ``decode``."""
+        return "prefill" if self.length < len(self.prompt) else "decode"
+
+    @property
+    def prompt_remaining(self) -> int:
+        return max(0, len(self.prompt) - self.length)
 
     @property
     def next_token(self) -> int:
-        """Token to feed at the next step (teacher-forced prompt, then gen)."""
+        """Token to feed at the next decode step (last generated; falls
+        back to the prompt cursor mid-prefill)."""
         if self.length < len(self.prompt):
             return self.prompt[self.length]
         return self.generated[-1]
@@ -69,28 +98,54 @@ class Request:
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
 
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.t_last is None or self.t_first is None \
+                or len(self.generated) < 2:
+            return None
+        return (self.t_last - self.t_first) / (len(self.generated) - 1)
+
 
 @dataclass
 class StepPlan:
-    """Immutable snapshot handed to the device step."""
+    """Immutable snapshot handed to the device step.
+
+    ``kind == "decode"``: one token per request — tokens/positions/lengths
+    are (B,), tables (B, nblk).  ``kind == "prefill"``: a chunk of
+    ``n_tokens`` prompt tokens of ONE request — tokens/positions are
+    (n_tokens,), tables (1, nblk), lengths (1,) = context INCLUDING the
+    chunk.  Either way the plan holds exactly one era-reservation slot.
+    """
 
     slot: int  # era-reservation slot guarding this step
     requests: List[Request]
-    tokens: np.ndarray  # (B,) int32
-    positions: np.ndarray  # (B,) int32
+    tokens: np.ndarray  # decode: (B,) i32; prefill: (C,) i32
+    positions: np.ndarray  # decode: (B,) i32; prefill: (C,) i32
     tables: np.ndarray  # (B, nblk) int32, padded with 0 (global slot ids)
-    lengths: np.ndarray  # (B,) int32 — context length INCLUDING this token
+    lengths: np.ndarray  # (B,) i32 — context length INCLUDING this step
     shard: int = 0  # every request in this plan lives in this shard
+    kind: str = "decode"  # "decode" | "prefill"
+    n_tokens: int = 1  # prefill chunk length (1 per request for decode)
 
 
 class Scheduler:
     def __init__(self, pool, *, block_size: int, max_batch: int,
-                 max_inflight: int = 4, deadline_ms: float = 50.0):
+                 max_inflight: int = 4, deadline_ms: float = 50.0,
+                 chunk_size: int = 16):
         self.pool = pool
         self.block_size = block_size
         self.max_batch = max_batch
         self.max_inflight = max_inflight
         self.deadline_ms = deadline_ms
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        self.chunk_size = chunk_size  # per-step prefill token budget
         # request-level shard router: round-robin assignment at submit,
         # one intake queue per shard (n_shards == 1 for unsharded pools)
         self.n_shards = getattr(pool, "n_shards", 1)
@@ -128,8 +183,11 @@ class Scheduler:
     # --------------------------------------------------------------- intake
     @property
     def queue(self) -> List[Request]:
-        """Flat view over the per-shard intake queues (emptiness checks)."""
-        return [r for q in self.queues for r in q]
+        """Flat SNAPSHOT of the per-shard intake queues, taken under the
+        queue lock — iterating the live deques while submit()/_evict()
+        mutate them raises RuntimeError."""
+        with self._qlock:
+            return [r for q in self.queues for r in q]
 
     def pending(self) -> int:
         with self._qlock:
@@ -137,6 +195,7 @@ class Scheduler:
 
     def submit(self, prompt: List[int], max_new_tokens: int) -> Request:
         req = Request(next(self._rid), list(prompt), max_new_tokens)
+        req.t_submit = time.monotonic()
         req.shard = req.rid % self.n_shards  # round-robin shard router
         with self._qlock:
             self.queues[req.shard].append(req)
@@ -151,7 +210,7 @@ class Scheduler:
 
     # --------------------------------------------------------------- tick
     def tick(self, tid: int) -> Optional[StepPlan]:
-        """Build one decode step.  Returns None when nothing is runnable.
+        """Plan one step.  Returns None when nothing is runnable.
 
         With a sharded pool each plan draws from ONE shard (the plan's
         device step then touches only that shard's KV-pool chain, so steps
@@ -204,7 +263,22 @@ class Scheduler:
         if not self._slots:
             return None  # all in-flight slots busy; caller completes first
 
-        # ensure block capacity for one more token per request.  Priority is
+        # prefill first (TTFT-priority): the oldest admitted request still
+        # materializing its prompt gets a chunk of up to ``chunk_size``
+        # tokens.  FCFS over the active list keeps the LIFO-preemption
+        # invariant: the oldest prefill makes monotonic progress.
+        for req in list(self.active):
+            if req.state != "active" or req.inflight or req.shard != shard:
+                continue
+            if req.phase != "prefill":
+                continue
+            plan = self._plan_prefill(req, tid, shard, stats)
+            if plan is not None:
+                return plan
+            # no pages for even one token of this request: try the next
+            # candidate (or fall through to a decode batch)
+
+        # decode batch: one token per decode-phase request.  Priority is
         # admission order (FCFS): under pool pressure the NEWEST request is
         # preempted (vLLM-style LIFO preemption), so the oldest request
         # makes monotonic progress — no eviction livelock.  Requests whose
@@ -212,9 +286,11 @@ class Scheduler:
         # they rejoin once that worker completes them.
         runnable: List[Request] = []
         for req in list(self.active):
-            if req.state != "active" or req.inflight or req.shard != shard:
+            if req.state != "active" or req.inflight or req.shard != shard \
+                    or req.phase != "decode":
                 continue  # evicted earlier in this loop, being stepped,
-                # or pinned to a different shard's device chain
+                # pinned to a different shard's device chain, or still
+                # materializing its prompt (prefill planner's job)
             if len(runnable) >= self.max_batch:
                 break
             if req.length % self.block_size == 0:  # needs a fresh block
@@ -261,23 +337,80 @@ class Scheduler:
         return StepPlan(slot, runnable, tokens, positions, tables, lengths,
                         shard=shard)
 
+    def _plan_prefill(self, req: Request, tid: int, shard: int,
+                      stats: Dict[str, int]) -> Optional[StepPlan]:
+        """Plan one prefill chunk for ``req`` (up to the token budget).
+
+        Bulk-allocates every page the chunk needs in ONE table version
+        (``append_blocks`` → ``alloc_blocks``, atomic under pressure).
+        Under exhaustion: LIFO-evict, retry; with no victim left, shrink
+        the chunk to the capacity of pages the request already owns; with
+        zero capacity, yield (None) so the tick can run something else.
+        """
+        ctx = req.length
+        n = min(self.chunk_size, len(req.prompt) - ctx)
+        need = -(-(ctx + n) // self.block_size) - len(req.table)
+        while need > 0:
+            try:
+                req.table.append_blocks(tid, need)
+                need = 0
+            except PoolExhausted:
+                victim = self._pick_victim(exclude=req, shard=shard)
+                if victim is None:
+                    # newest non-inflight request is us: shrink the chunk
+                    # to the pages already owned and run that much
+                    n = min(n, len(req.table) * self.block_size - ctx)
+                    if n <= 0:
+                        return None
+                    need = 0
+                else:
+                    self._evict(victim, tid)
+
+        slot = self._slots.popleft()
+        # same Lemma-4 discipline as decode: ONE reservation published
+        # BEFORE the table snapshot covers every page the chunk touches —
+        # bulk page access at O(1) protection cost (the interval property)
+        self.pool.protect_step(slot, tid, shard=shard)
+
+        req.inflight = True
+        snap = req.table.current()  # protected snapshot
+        ids = snap.block_ids
+        tables = np.zeros((1, len(ids)), np.int32)
+        tables[0, :] = ids
+        tokens = np.asarray(req.prompt[ctx:ctx + n], np.int32)
+        positions = np.arange(ctx, ctx + n, dtype=np.int32)
+        lengths = np.array([ctx + n], np.int32)
+        stats["steps"] += 1
+        stats["prefill_chunks"] += 1
+        stats["prefill_tokens"] += n
+        return StepPlan(slot, [req], tokens, positions, tables, lengths,
+                        shard=shard, kind="prefill", n_tokens=n)
+
     # --------------------------------------------------------------- complete
     def complete(self, plan: StepPlan, sampled: np.ndarray, tid: int) -> None:
-        """Account one finished device step; release its reservation."""
+        """Account one finished device step; release its reservation.
+
+        For a prefill plan ``sampled`` holds ONE token — the argmax of the
+        chunk's last valid position — consumed only by the chunk that
+        materializes the final prompt token (it IS the first generated
+        token); earlier chunks' samples are discarded.
+        """
         stats = self._wstats(tid)
         with self._lock:
-            for req, tok in zip(plan.requests, sampled):
+            if plan.kind == "prefill":
+                req = plan.requests[0]
                 req.inflight = False
-                req.length += 1
-                # the step that consumed the last prompt token produces the
-                # first generated token
+                req.length += plan.n_tokens
                 if req.length >= len(req.prompt):
-                    req.generated.append(int(tok))
-                if req.done:
-                    req.state = "done"
-                    req.table.release_all(tid)
-                    self.active.remove(req)
-                    stats["completed"] += 1
+                    self._append_token(req, int(sampled[0]), tid, stats)
+            else:
+                for req, tok in zip(plan.requests, sampled):
+                    req.inflight = False
+                    req.length += 1
+                    # the step that consumed the last prompt token produces
+                    # the first generated token
+                    if req.length >= len(req.prompt):
+                        self._append_token(req, int(tok), tid, stats)
             self.pool.release_step(plan.slot, tid, shard=plan.shard)
             self._slots.append(plan.slot)
             self._work.notify_all()  # freed a slot + un-inflighted requests
@@ -293,10 +426,30 @@ class Scheduler:
         # plan.shard, so one shard's drain covers them.
         stats["reclaimed"] += self.pool.cleanup(tid, shard=plan.shard)
 
+    def _append_token(self, req: Request, tok: int, tid: int,
+                      stats: Dict[str, int]) -> None:
+        """Deliver one generated token (and retire the request when done).
+        Caller holds the scheduler lock."""
+        req.generated.append(tok)
+        req.t_last = time.monotonic()
+        if req.t_first is None:
+            req.t_first = req.t_last
+        if req.done:
+            req.state = "done"
+            req.table.release_all(tid)
+            self.active.remove(req)
+            stats["completed"] += 1
+
     # --------------------------------------------------------------- evict
     def _pick_victim(self, exclude: Request,
                      shard: Optional[int] = None) -> Optional[Request]:
         """LIFO preemption: the newest admission yields (vLLM policy).
+
+        Only requests admitted AFTER ``exclude`` are candidates — blocks
+        flow strictly from newer to older requests, so the oldest request
+        makes monotonic progress and the newest can never steal (it
+        shrinks its chunk or waits instead).  Without this bound two
+        prefill-phase requests under pressure evict each other forever.
 
         Never preempts a request whose step is in flight — its block-table
         snapshot is feeding a device step right now (the era reservation
@@ -307,7 +460,7 @@ class Scheduler:
         """
         for req in reversed(self.active):
             if req is exclude:
-                continue
+                break  # everything earlier in the list is OLDER: off-limits
             if shard is not None and req.shard != shard:
                 continue
             if req.state == "active" and not req.inflight:
@@ -316,8 +469,13 @@ class Scheduler:
 
     def _evict(self, req: Request, tid: int) -> None:
         req.table.release_all(tid)
-        req.length = 0
+        req.length = 0  # prefill cursor rewinds: the prompt rematerializes
         req.generated.clear()
+        # latency stamps follow the tokens they timed: the re-run delivers
+        # a fresh first token, so TTFT/TPOT restart (keeping the old
+        # t_first would understate TTFT and fold the eviction gap into TPOT)
+        req.t_first = None
+        req.t_last = None
         req.state = "queued"
         req.evictions += 1
         self.active.remove(req)

@@ -110,6 +110,31 @@ class ShardedBlockPool:
             f"all {self.n_shards} shards of {self.n_blocks} blocks "
             f"exhausted") from last_exc
 
+    def alloc_blocks(self, n: int, tid: int,
+                     shard: Optional[int] = None) -> List[KVBlock]:
+        """Bulk allocation — all ``n`` from ONE shard (all or nothing).
+
+        A prefill chunk's pages must share a shard (the request's device
+        steps touch one shard's KV chain), so the bulk grab never splits
+        across shards; unpinned callers fall back shard by shard.
+        """
+        if shard is not None:
+            blks = self.shards[shard].alloc_blocks(n, tid)
+            for blk in blks:
+                blk.home_shard = shard
+            return blks
+        h = self.home(tid)
+        last_exc: Optional[PoolExhausted] = None
+        for k in range(self.n_shards):
+            s = (h + k) % self.n_shards
+            try:
+                return self.alloc_blocks(n, tid, shard=s)
+            except PoolExhausted as e:
+                last_exc = e
+        raise PoolExhausted(
+            f"no single shard of {self.n_shards} has {n} free blocks"
+        ) from last_exc
+
     def retire(self, blk: KVBlock, tid: int) -> None:
         # the home shard's clock stamped alloc_era; retire on the same clock
         self.shards[blk.home_shard].retire(blk, tid)

@@ -1,14 +1,16 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
 * ``era_scan`` — WFE cleanup() interval scan (paper Fig. 4 / Theorem 4)
-* ``paged_attention`` — decode attention through era-reclaimed block tables
+* ``paged_attention`` — attention through era-reclaimed block tables,
+  written for a (C, ...) query chunk (chunked prefill); single-token
+  decode is the C == 1 specialization
 
 Each kernel ships with a pure-jnp oracle in ``ref.py``; ``ops.py`` is the
 public jit'd entry point with a kernel/reference selector.
 """
 
 from .ops import (can_delete_blocks, can_delete_blocks_interval,
-                  paged_decode_attention)
+                  paged_chunk_attention, paged_decode_attention)
 
 __all__ = ["can_delete_blocks", "can_delete_blocks_interval",
-           "paged_decode_attention"]
+           "paged_chunk_attention", "paged_decode_attention"]

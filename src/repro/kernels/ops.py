@@ -13,10 +13,10 @@ import jax.numpy as jnp
 
 from . import ref
 from .era_scan import era_scan, era_scan_interval
-from .paged_attention import paged_attention
+from .paged_attention import paged_attention, paged_attention_chunk
 
 __all__ = ["can_delete_blocks", "can_delete_blocks_interval",
-           "paged_decode_attention"]
+           "paged_decode_attention", "paged_chunk_attention"]
 
 
 def can_delete_blocks(alloc_eras, retire_eras, reservations, *,
@@ -59,3 +59,21 @@ def paged_decode_attention(q, k_pool, v_pool, tables, lengths, *,
                                scale=scale, interpret=interpret)
     return ref.paged_attention_ref(q, k_pool, v_pool, tables, lengths,
                                    scale=scale)
+
+
+def paged_chunk_attention(q, k_pool, v_pool, tables, q_positions, *,
+                          scale: Optional[float] = None,
+                          use_kernel: bool = False,
+                          interpret: bool = True) -> jax.Array:
+    """Chunked-prefill attention over the paged pool.
+
+    q (B,C,KH,G,D) -> (B,C,KH,G,D); each query at absolute position p sees
+    pool tokens at positions <= p (prior context + intra-chunk causal).
+    """
+    tables = jnp.asarray(tables, jnp.int32)
+    q_positions = jnp.asarray(q_positions, jnp.int32)
+    if use_kernel:
+        return paged_attention_chunk(q, k_pool, v_pool, tables, q_positions,
+                                     scale=scale, interpret=interpret)
+    return ref.paged_attention_chunk_ref(q, k_pool, v_pool, tables,
+                                         q_positions, scale=scale)

@@ -1,21 +1,28 @@
-"""Pallas TPU kernel: decode attention through WFE-managed block tables.
+"""Pallas TPU kernel: attention through WFE-managed block tables.
 
-This is the consumer of the era-reclaimed block pool: one query token per
-request attends over K/V scattered across pool blocks named by the request's
-block table.  The GPU version of this idea (vLLM PagedAttention) walks the
-table with per-warp gathers; the TPU adaptation uses
-``PrefetchScalarGridSpec`` so the *block table itself drives the BlockSpec
-index_map`` — the pipeline prefetches exactly the pool blocks the table
-names, and the kernel body never sees a gather:
+This is the consumer of the era-reclaimed block pool: query tokens attend
+over K/V scattered across pool blocks named by the request's block table.
+The GPU version of this idea (vLLM PagedAttention) walks the table with
+per-warp gathers; the TPU adaptation uses ``PrefetchScalarGridSpec`` so
+the *block table itself drives the BlockSpec index_map* — the pipeline
+prefetches exactly the pool blocks the table names, and the kernel body
+never sees a gather.
+
+The kernel is written for a (C, ...) **query chunk** per request (chunked
+prefill); single-token decode is the C == 1 specialization:
 
 * grid = (B, KH, nblk); the innermost block-index dimension is sequential,
-  carrying a flash-style (m, l, acc) accumulator in VMEM scratch;
+  carrying a flash-style (m, l, acc) accumulator per query row in VMEM
+  scratch;
 * K/V pool BlockSpecs are (1, bs, 1, D) with index_map
   ``(tables[b, j], 0, h, 0)`` — scalar-prefetched table entries select the
   HBM tile to stream, so only live blocks are ever read;
-* softmax masking is by context length (padded table slots are fetched but
-  masked; a production refinement bounds the grid per-request via the
-  prefetched lengths).
+* masking is causal by ABSOLUTE position: a chunk query at position p sees
+  every pool token at positions <= p — the table's prior context AND the
+  chunk's own earlier tokens (which the caller scattered into the pool
+  before attention), so one mask covers history + intra-chunk causality;
+* padded table slots are fetched but masked; a production refinement
+  bounds the grid per-request via the prefetched positions.
 """
 
 from __future__ import annotations
@@ -31,9 +38,8 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_attn_kernel(tables, lengths, q_ref, k_ref, v_ref, out_ref,
-                       m_s, l_s, acc_s, *, bs: int, scale: float):
-    b = pl.program_id(0)
+def _paged_chunk_kernel(tables, q_ref, qpos_ref, k_ref, v_ref, out_ref,
+                        m_s, l_s, acc_s, *, bs: int, scale: float):
     j = pl.program_id(2)
     nblk = pl.num_programs(2)
 
@@ -43,67 +49,91 @@ def _paged_attn_kernel(tables, lengths, q_ref, k_ref, v_ref, out_ref,
         l_s[:] = jnp.zeros_like(l_s)
         acc_s[:] = jnp.zeros_like(acc_s)
 
-    q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+    q = q_ref[0, :, 0].astype(jnp.float32)     # (C, G, D)
+    qp = qpos_ref[0]                           # (C,) absolute positions
     k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bs, D)
     v = v_ref[0, :, 0, :].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+    # (C, G, bs) scores for this pool block
+    s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    valid = pos < lengths[b]  # (1, bs)
+    kvpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+    valid = kvpos <= qp[:, None, None]         # (C, 1, bs): causal-by-position
     s = jnp.where(valid, s, NEG_INF)
 
-    m_prev = m_s[:, :1]  # (G, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # (G, bs)
-    corr = jnp.exp(m_prev - m_new)  # (G, 1)
-    l_s[:, :1] = l_s[:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+    m_prev = m_s[:, :, :1]                     # (C, G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # (C, G, bs)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[:, :, :1] = l_s[:, :, :1] * corr + jnp.sum(p, axis=2, keepdims=True)
     acc_s[:] = acc_s[:] * corr + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_s[:, :1] = m_new
+        p, v, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[:, :, :1] = m_new
 
     @pl.when(j == nblk - 1)
     def _finalize():
-        out_ref[0, 0] = (acc_s[:] / jnp.maximum(l_s[:, :1], 1e-30)
-                         ).astype(out_ref.dtype)
+        out_ref[0, :, 0] = (acc_s[:] / jnp.maximum(l_s[:, :, :1], 1e-30)
+                            ).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("scale", "interpret"))
-def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
-                    tables: jax.Array, lengths: jax.Array, *,
-                    scale: float | None = None,
-                    interpret: bool = True) -> jax.Array:
-    """q (B,KH,G,D); pools (N,bs,KH,D); tables (B,nblk) i32; lengths (B,) i32.
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention_chunk(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                          tables: jax.Array, q_positions: jax.Array, *,
+                          scale: float | None = None,
+                          interpret: bool = True) -> jax.Array:
+    """q (B,C,KH,G,D); pools (N,bs,KH,D); tables (B,nblk) i32;
+    q_positions (B,C) i32 absolute positions.  Returns (B,C,KH,G,D).
 
-    Returns (B, KH, G, D).
+    Each query row attends to every pool token the table names at an
+    absolute position <= its own (prior context + intra-chunk causal).
     """
-    b, kh, g, d = q.shape
+    b, c, kh, g, d = q.shape
     n, bs, _, _ = k_pool.shape
     nblk = tables.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
 
-    kernel = functools.partial(_paged_attn_kernel, bs=bs, scale=scale)
+    kernel = functools.partial(_paged_chunk_kernel, bs=bs, scale=scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=1,
         grid=(b, kh, nblk),
         in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda bi, h, j, tbl, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, c, 1, g, d),
+                         lambda bi, h, j, tbl: (bi, 0, h, 0, 0)),
+            pl.BlockSpec((1, c), lambda bi, h, j, tbl: (bi, 0)),
             pl.BlockSpec((1, bs, 1, d),
-                         lambda bi, h, j, tbl, ln: (tbl[bi, j], 0, h, 0)),
+                         lambda bi, h, j, tbl: (tbl[bi, j], 0, h, 0)),
             pl.BlockSpec((1, bs, 1, d),
-                         lambda bi, h, j, tbl, ln: (tbl[bi, j], 0, h, 0)),
+                         lambda bi, h, j, tbl: (tbl[bi, j], 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d),
-                               lambda bi, h, j, tbl, ln: (bi, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, c, 1, g, d),
+                               lambda bi, h, j, tbl: (bi, 0, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, 128), jnp.float32),  # m (col 0 used; lane-padded)
-            pltpu.VMEM((g, 128), jnp.float32),  # l
-            pltpu.VMEM((g, d), jnp.float32),    # acc
+            pltpu.VMEM((c, g, 128), jnp.float32),  # m (col 0; lane-padded)
+            pltpu.VMEM((c, g, 128), jnp.float32),  # l
+            pltpu.VMEM((c, g, d), jnp.float32),    # acc
         ],
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, c, kh, g, d), q.dtype),
         interpret=interpret,
-    )(tables, lengths, q, k_pool, v_pool)
+    )(tables, q, q_positions, k_pool, v_pool)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    tables: jax.Array, lengths: jax.Array, *,
+                    scale: float | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """Single-token decode attention: the C == 1 chunk specialization.
+
+    q (B,KH,G,D); pools (N,bs,KH,D); tables (B,nblk) i32; lengths (B,) i32
+    (context length INCLUDING the query token).  Returns (B, KH, G, D).
+    """
+    # a decode token at position lengths-1 sees kv positions < lengths —
+    # exactly the chunk kernel's causal-by-position mask with C == 1
+    q_positions = (lengths - 1).astype(jnp.int32)[:, None]  # (B, 1)
+    out = paged_attention_chunk(q[:, None], k_pool, v_pool, tables,
+                                q_positions, scale=scale,
+                                interpret=interpret)
+    return out[:, 0]

@@ -42,6 +42,40 @@ def era_scan_ref(alloc_eras: jax.Array, retire_eras: jax.Array,
     return era_scan_interval_ref(alloc_eras, retire_eras, res, res)
 
 
+# ------------------------------------------------------ paged chunk attention
+def paged_attention_chunk_ref(
+    q: jax.Array,            # (B, C, KH, G, D)  a query CHUNK per request
+    k_pool: jax.Array,       # (N, bs, KH, D) paged key pool
+    v_pool: jax.Array,       # (N, bs, KH, D) paged value pool
+    tables: jax.Array,       # (B, nblk) int32 block ids (padding: any valid id)
+    q_positions: jax.Array,  # (B, C) int32 absolute positions of the queries
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Chunked-prefill attention through block tables: each chunk query at
+    absolute position p attends over every pool token the table names at
+    positions <= p — the table's prior context plus the chunk's own earlier
+    tokens (scattered into the pool by the caller before attention).
+    Returns (B, C, KH, G, D).
+    """
+    b, c, kh, g, d = q.shape
+    n, bs, _, _ = k_pool.shape
+    nblk = tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    k = k_pool[tables].reshape(b, nblk * bs, kh, d)
+    v = v_pool[tables].reshape(b, nblk * bs, kh, d)
+    s = jnp.einsum("bckgd,bskd->bkgcs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    kvpos = jnp.arange(nblk * bs)  # logical positions within the table
+    mask = kvpos[None, None, :] <= q_positions[:, :, None]  # (B, C, S)
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgcs,bskd->bckgd", w.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 # ----------------------------------------------------- paged decode attention
 def paged_attention_ref(
     q: jax.Array,          # (B, KH, G, D)  one query token per request

@@ -10,6 +10,11 @@ Sharded multi-worker runtime (one SMR instance per shard, era clocks
 max-merged on step boundaries; K worker threads pipelining device steps):
 
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --workers 4
+
+Chunked prefill (a P-token prompt costs ceil(P/C) device steps; reports
+TTFT/TPOT — see docs/benchmarks.md for definitions):
+
+  PYTHONPATH=src python -m repro.launch.serve --chunk-size 32
 """
 
 from __future__ import annotations
@@ -43,6 +48,10 @@ def main(argv=None) -> int:
                     help="serve worker threads (pipelined device steps)")
     ap.add_argument("--merge-freq", type=int, default=1,
                     help="steps between shard era-clock max-merges")
+    ap.add_argument("--chunk-size", type=int, default=16,
+                    help="prefill chunk token budget: a P-token prompt "
+                         "materializes in ceil(P/C) device steps (1 = "
+                         "token-at-a-time)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -61,10 +70,12 @@ def main(argv=None) -> int:
                          n_shards=args.shards, merge_freq=args.merge_freq,
                          max_threads=max(8, args.workers + 1),
                          max_inflight=max(4, args.workers),
+                         chunk_size=args.chunk_size,
                          **smr_kwargs)
+    reqs = []
     for i in range(args.requests):
         prompt = [(3 * i + j) % cfg.vocab_size for j in range(1 + i % 6)]
-        engine.submit(prompt, args.new_tokens)
+        reqs.append(engine.submit(prompt, args.new_tokens))
     t0 = time.time()
     if args.workers > 1:
         runtime = ServeRuntime(engine, n_workers=args.workers)
@@ -75,7 +86,14 @@ def main(argv=None) -> int:
     dt = time.time() - t0
     toks = stats["completed"] * args.new_tokens
     print(f"scheme={args.scheme} shards={args.shards} workers={args.workers} "
-          f"completed={stats['completed']} tokens={toks} ({toks/dt:.1f} tok/s)")
+          f"chunk={args.chunk_size} completed={stats['completed']} "
+          f"tokens={toks} ({toks/dt:.1f} tok/s)")
+    ttfts = sorted(r.ttft for r in reqs if r.ttft is not None)
+    tpots = sorted(r.tpot for r in reqs if r.tpot is not None)
+    if ttfts:
+        print(f"TTFT p50 {1e3 * ttfts[len(ttfts) // 2]:.1f} ms"
+              + (f" | TPOT p50 {1e3 * tpots[len(tpots) // 2]:.2f} ms"
+                 if tpots else ""))
     print("scheduler:", stats)
     print("pool:", engine.pool.stats())
     return 0

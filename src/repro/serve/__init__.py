@@ -1,8 +1,8 @@
 """Serving runtime: continuous batching over the WFE-reclaimed block pool."""
 
 from .engine import ServeEngine
-from .paged_model import paged_decode_step, paged_prefill_into_pool
+from .paged_model import paged_decode_step, paged_prefill_chunk
 from .runtime import ServeRuntime
 
 __all__ = ["ServeEngine", "ServeRuntime", "paged_decode_step",
-           "paged_prefill_into_pool"]
+           "paged_prefill_chunk"]

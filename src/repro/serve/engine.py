@@ -1,14 +1,22 @@
-"""Serving engine: continuous batching + WFE block pool + paged decode.
+"""Serving engine: continuous batching + WFE block pool + paged steps.
 
 The full adaptation loop (DESIGN.md §2.1(A)):
 
   submit() -> scheduler queue -> tick(): admit / allocate blocks (WFE
-  alloc_block) / protect_step (WFE get_protected, one era reservation per
-  in-flight step) -> device decode step gathers K/V through the protected
+  alloc_block / bulk alloc_blocks) / protect_step (WFE get_protected, one
+  era reservation per in-flight step) -> device step — a DECODE batch or
+  a PREFILL chunk (``StepPlan.kind``) — reads K/V through the protected
   block tables -> complete(): append tokens, retire finished requests'
   blocks (WFE retire), release the step reservation, cleanup() reclaims.
 
-Greedy sampling; the device step dispatches through one jitted function.
+Chunked prefill: a prompt materializes ``chunk_size`` tokens per dispatch
+(``paged_prefill_chunk``), so a P-token prompt costs ceil(P/C) steps, not
+P.  Prefill chunks dispatch through pow2 chunk-length buckets next to the
+table-width buckets, and both plan kinds share the per-shard device locks
+— multi-worker pipelining overlaps a prefill chunk on one shard with
+decode batches on others.
+
+Greedy sampling; each plan kind dispatches through one jitted function.
 ``use_kernel=True`` accelerates BOTH compute paths: paged decode attention
 takes the Pallas kernel AND reclamation takes the Pallas ``era_scan``
 backend of ``cleanup_batch`` (``cleanup_backend="pallas"``); otherwise the
@@ -46,7 +54,7 @@ import numpy as np
 from repro.blocks import BlockPool, Scheduler, ShardedBlockPool
 from repro.models.common import ArchConfig
 
-from .paged_model import init_pools, paged_decode_step
+from .paged_model import init_pools, paged_decode_step, paged_prefill_chunk
 
 __all__ = ["ServeEngine"]
 
@@ -84,6 +92,22 @@ def _jit_decode(cfg, use_kernel: bool):
     return jax.jit(_decode, donate_argnums=(1,))
 
 
+@functools.lru_cache(maxsize=None)
+def _jit_prefill(cfg, use_kernel: bool):
+    """Jitted chunked-prefill step with fused greedy sampling of the
+    chunk's last valid token (the first generated token when the chunk
+    consumes the final prompt token).  Shares one compilation cache across
+    engines like ``_jit_decode``; donated pools write pages in place."""
+
+    def _prefill(params, pools, tables, tokens, positions, chunk_lens):
+        logits, pools = paged_prefill_chunk(
+            cfg, params, pools, tables, tokens, positions, chunk_lens,
+            use_kernel=use_kernel)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), pools
+
+    return jax.jit(_prefill, donate_argnums=(1,))
+
+
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, n_blocks: int = 64,
                  block_size: int = 8, max_batch: int = 8,
@@ -91,7 +115,8 @@ class ServeEngine:
                  cleanup_backend: str = "numpy",
                  max_threads: int = 8, n_shards: int = 1,
                  max_inflight: int = 4, merge_freq: int = 1,
-                 pad_shapes: bool = True, **smr_kwargs):
+                 pad_shapes: bool = True, chunk_size: int = 16,
+                 **smr_kwargs):
         self.cfg = cfg
         self.params = params
         self.block_size = block_size
@@ -113,7 +138,8 @@ class ServeEngine:
             self.pool = BlockPool(n_blocks, **pool_kwargs)
         self.sched = Scheduler(self.pool, block_size=block_size,
                                max_batch=max_batch,
-                               max_inflight=max_inflight)
+                               max_inflight=max_inflight,
+                               chunk_size=chunk_size)
         # ONE device-pool chain per shard: a step's functional KV update
         # depends on the previous value of the pools it touches, so a
         # single chain serializes every step's compute.  Request-level
@@ -138,6 +164,7 @@ class ServeEngine:
         # instead of copying every page each token (CPU hosts)
         self._step = _jit_step(cfg, use_kernel)
         self._decode = _jit_decode(cfg, use_kernel)
+        self._prefill = _jit_prefill(cfg, use_kernel)
 
     # legacy single-shard view of the device pools (tests/benchmarks drive
     # engine._step with engine.pools directly)
@@ -161,28 +188,55 @@ class ServeEngine:
         plan = self.sched.tick(tid)
         if plan is None:
             return False
+        self.execute_plan(plan, tid)
+        return True
+
+    def execute_plan(self, plan, tid: int) -> np.ndarray:
+        """Dispatch one typed plan to the device and account the result.
+
+        Benchmarks call this directly after timing ``sched.tick`` — the
+        planner and the device step are separately measurable.
+        """
+        if plan.kind == "prefill":
+            sampled = self._dispatch_prefill(plan)
+        else:
+            sampled = self._dispatch_decode(plan)
+        self.sched.complete(plan, sampled, tid)
+        return sampled
+
+    def _bucket_tables(self, plan, rows: int):
+        """Shard-localize + (optionally) pad a plan's table to its pow2
+        width bucket.  Returns (tables (rows, W) i32, pad_slot)."""
         s = plan.shard
         base = self._shard_bases[s]
         pad_slot = self._shard_sizes[s]  # shard-local scratch slot id
         # shard-local slot ids: the plan's tables name global slots; this
         # shard's device pool indexes [0, size + pad).  Column padding (0
-        # fill) clamps to local 0 — never written, reads masked by length.
+        # fill) clamps to local 0 — never written, reads masked by length
+        # (decode) / causal position (prefill).
         local = np.maximum(plan.tables.astype(np.int32) - base, 0)
-        tables, lengths = local, plan.lengths
-        tokens, positions = plan.tokens, plan.positions
-        b = tables.shape[0]
+        if not self.pad_shapes:
+            return local, pad_slot
+        b, nblk = local.shape
+        w = 1 << max(0, nblk - 1).bit_length()
+        tables = np.full((rows, w), pad_slot, np.int32)
+        tables[:b, :] = 0
+        tables[:b, :nblk] = local
+        return tables, pad_slot
+
+    def _dispatch_decode(self, plan) -> np.ndarray:
+        s = plan.shard
+        b = plan.tables.shape[0]
+        rows = self.max_batch if self.pad_shapes else b
+        tables, _ = self._bucket_tables(plan, rows)
+        lengths, tokens, positions = (plan.lengths, plan.tokens,
+                                      plan.positions)
         if self.pad_shapes:
-            nblk = tables.shape[1]
-            w = 1 << max(0, nblk - 1).bit_length()
-            bb = self.max_batch
-            tables = np.full((bb, w), pad_slot, np.int32)
-            tables[:b, :] = 0
-            tables[:b, :nblk] = local
-            lengths = np.ones((bb,), np.int32)  # pad rows: one scratch token
+            lengths = np.ones((rows,), np.int32)  # pad rows: 1 scratch token
             lengths[:b] = plan.lengths
-            tokens = np.zeros((bb,), np.int32)
+            tokens = np.zeros((rows,), np.int32)
             tokens[:b] = plan.tokens
-            positions = np.zeros((bb,), np.int32)
+            positions = np.zeros((rows,), np.int32)
             positions[:b] = plan.positions
         with self._device_locks[s]:
             out, self._shard_pools[s] = self._decode(
@@ -191,9 +245,30 @@ class ServeEngine:
                 jnp.asarray(tokens), jnp.asarray(positions))
         # block on the result OUTSIDE the lock: other workers plan/dispatch
         # and execute OTHER shards' chains while this one waits
-        sampled = np.asarray(out)[:b]
-        self.sched.complete(plan, sampled, tid)
-        return True
+        return np.asarray(out)[:b]
+
+    def _dispatch_prefill(self, plan) -> np.ndarray:
+        """One prefill chunk (B == 1): pad the chunk length to its pow2
+        bucket next to the existing table-width buckets, so XLA compiles
+        once per (chunk bucket, width bucket) instead of per chunk shape."""
+        s = plan.shard
+        n = plan.n_tokens
+        ctx = int(plan.lengths[0]) - n  # context BEFORE the chunk
+        cb = 1 << max(0, n - 1).bit_length() if self.pad_shapes else n
+        tables, _ = self._bucket_tables(plan, 1)
+        tokens = np.zeros((1, cb), np.int32)
+        tokens[0, :n] = plan.tokens
+        # pad positions clamp to the last valid one: their (discarded)
+        # attention rows stay masked to materialized pages — no NaN risk
+        positions = (ctx + np.minimum(np.arange(cb), n - 1)
+                     ).astype(np.int32)[None, :]
+        chunk_lens = np.array([n], np.int32)
+        with self._device_locks[s]:
+            out, self._shard_pools[s] = self._prefill(
+                self.params, self._shard_pools[s],
+                jnp.asarray(tables), jnp.asarray(tokens),
+                jnp.asarray(positions), jnp.asarray(chunk_lens))
+        return np.asarray(out)[:1]
 
     # ------------------------------------------------------------- drain
     def drain(self, tid: int) -> int:

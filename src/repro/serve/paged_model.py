@@ -18,7 +18,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import paged_decode_attention
+from repro.kernels import paged_chunk_attention, paged_decode_attention
 from repro.models import transformer
 from repro.models.attention import _qkv
 from repro.models.layers import (apply_mlp, apply_norm, embed_tokens, matmul,
@@ -109,22 +109,44 @@ def paged_decode_step(cfg, params, pools, tables, lengths, tokens, positions,
     return logits, pools
 
 
-def paged_prefill_into_pool(cfg, params, pools, tables, tokens,
-                            *, use_kernel: bool = False):
-    """Prompt processing that scatters K/V into the paged pool.
+#: out-of-bounds scatter sentinel: with ``mode="drop"`` a block id this
+#: large drops the update entirely (padded chunk rows write nothing; note
+#: NEGATIVE ids would wrap, so the sentinel must be a large positive)
+_DROP_BLOCK = jnp.int32(2**30)
 
-    tokens (B, S) with S a multiple of the block size; tables (B, S//bs).
-    Returns (last-token logits (B, V), updated pools).
+
+def paged_prefill_chunk(cfg, params, pools, tables, tokens, positions,
+                        chunk_lens=None, *, use_kernel: bool = False):
+    """Run a C-token prompt CHUNK against already-materialized pages.
+
+    The chunked-prefill device step: the chunk's K/V rows scatter into the
+    pool blocks the table names, then every chunk query attends over the
+    table's prior context PLUS the chunk's own earlier tokens — one paged
+    causal-by-position attention covers both (the scatter runs first, so
+    the pool holds every kv position <= the last query's).  No whole-prompt
+    or ``S % block_size == 0`` restriction: any ragged tail of any prompt
+    can be a chunk.
+
+    tables (B, nblk) i32; tokens/positions (B, C) i32 (positions are
+    absolute: ``ctx + i`` for a chunk starting at context length ctx);
+    chunk_lens (B,) i32 — valid tokens per row (None = all C; padded rows
+    scatter nothing and their outputs are never read).
+    Returns (logits of each row's LAST VALID token (B, V), updated pools).
     """
     _check_paged_support(cfg)
-    b, s = tokens.shape
+    b, c = tokens.shape
     bs = pools["k"].shape[2]
-    assert s % bs == 0, (s, bs)
-    nblk = s // bs
-    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    nblk = tables.shape[1]
+    kh, hd, h = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_heads
+    g = h // kh
+    if chunk_lens is None:
+        chunk_lens = jnp.full((b,), c, jnp.int32)
+    valid = jnp.arange(c)[None, :] < chunk_lens[:, None]  # (B, C)
+    # destination block/offset per chunk token; padded rows drop their write
+    col = jnp.minimum(positions // bs, nblk - 1)
+    blk = jnp.where(valid, tables[jnp.arange(b)[:, None], col], _DROP_BLOCK)
+    off = positions % bs
     x = embed_tokens(cfg, params["embed"], tokens)
-
-    from repro.models.attention import flash_attention
 
     n_pat = len(cfg.block_pattern)
     n_layers = cfg.n_groups * n_pat
@@ -134,25 +156,31 @@ def paged_prefill_into_pool(cfg, params, pools, tables, tokens,
         kind = cfg.block_pattern[j]
         bp = jax.tree.map(lambda a: a[g_i], params["groups"][f"b{j}_{kind}"])
         hn = apply_norm(cfg, bp["norm_mix"], x)
-        q, k, v = _qkv(cfg, bp["mix"], hn, positions)
-        out = flash_attention(q, k, v, positions, positions, causal=True)
-        out = out.reshape(b, s, cfg.n_heads * cfg.resolved_head_dim)
+        q, k1, v1 = _qkv(cfg, bp["mix"], hn, positions)
+        # scatter the chunk's K/V into the paged pool FIRST, so the
+        # attention below sees intra-chunk keys through the same tables
+        k_pool = pools["k"][l].at[blk, off].set(k1, mode="drop")
+        v_pool = pools["v"][l].at[blk, off].set(v1, mode="drop")
+        qg = q.reshape(b, c, kh, g, hd)
+        out = paged_chunk_attention(qg, k_pool, v_pool, tables, positions,
+                                    scale=1.0 / math.sqrt(hd),
+                                    use_kernel=use_kernel)
+        out = out.reshape(b, c, h * hd).astype(x.dtype)
         x = x + matmul(out, bp["mix"]["wo"])
         if transformer._has_mlp(cfg):
             hn = apply_norm(cfg, bp["norm_mlp"], x)
             ff = moe_mod.apply_moe(cfg, bp["mlp"], hn) if cfg.is_moe \
                 else apply_mlp(cfg, bp["mlp"], hn)
             x = x + ff
-        kp = pools["k"][l].at[tables].set(
-            k.reshape(b, nblk, bs, *k.shape[2:]))
-        vp = pools["v"][l].at[tables].set(
-            v.reshape(b, nblk, bs, *v.shape[2:]))
-        new_k.append(kp)
-        new_v.append(vp)
+        new_k.append(k_pool)
+        new_v.append(v_pool)
     pools = {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}
-    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    # unembed ONLY each row's last valid token — the chunk that consumes
+    # the final prompt token yields the first generated token from it
+    last = x[jnp.arange(b), chunk_lens - 1][:, None]  # (B, 1, d)
+    last = apply_norm(cfg, params["final_norm"], last)
     head = params["embed"] if cfg.tie_embeddings else params["head"]
-    logits = unembed(cfg, head, x)[:, 0]
+    logits = unembed(cfg, head, last)[:, 0]
     return logits, pools
 
 

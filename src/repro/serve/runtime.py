@@ -8,6 +8,11 @@
   against a *disjoint* set of requests — the scheduler's ``inflight``
   discipline guarantees no request is ever stepped twice concurrently, and
   ``max_inflight`` era-reservation slots bound the pipeline depth;
+* steps are TYPED plans (``StepPlan.kind``): a worker may be running a
+  prefill CHUNK on one shard while siblings run decode batches on others —
+  prefill and decode overlap across the per-shard device chains, so long
+  prompts stop serializing the fleet (``stats['prefill_chunks']`` /
+  ``stats['prefill_tokens']`` count the chunked work);
 * each worker keeps its own scheduler stats dict (single-writer);
   ``serve()`` returns the merged aggregate plus per-worker breakdowns;
 * shutdown is a graceful two-phase drain: workers exit when the queue and

@@ -18,7 +18,7 @@ from repro.configs import get_smoke_config
 from repro.models import build_model
 from repro.serve import ServeEngine
 from repro.serve.paged_model import (init_pools, paged_decode_step,
-                                     paged_prefill_into_pool)
+                                     paged_prefill_chunk)
 
 
 # ================================================================ pool
@@ -194,11 +194,13 @@ def test_paged_decode_matches_contiguous(dense_model):
     lg_ref, cache = model.prefill(params, toks[:, :s], max_len=s + 4)
     lg_dec_ref, _ = model.decode_step(params, cache, toks[:, s],
                                       jnp.full((b,), s, jnp.int32))
-    # paged: 3 blocks per request (2 for the prompt, 1 for decode)
+    # paged: 3 blocks per request (2 for the prompt, 1 for decode); the
+    # whole prompt runs as ONE prefill chunk (ctx == 0)
     pools = init_pools(cfg, n_blocks=16, block_size=bs)
     tables = jnp.array([[0, 1, 2], [3, 4, 5]], jnp.int32)
-    lg_pg, pools = paged_prefill_into_pool(cfg, params, pools,
-                                           tables[:, :2], toks[:, :s])
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    lg_pg, pools = paged_prefill_chunk(cfg, params, pools,
+                                       tables[:, :2], toks[:, :s], positions)
     np.testing.assert_allclose(np.asarray(lg_pg), np.asarray(lg_ref),
                                rtol=2e-3, atol=2e-3)
     lg_dec_pg, pools = paged_decode_step(

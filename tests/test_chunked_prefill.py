@@ -1,0 +1,248 @@
+"""Chunked-prefill correctness suite (the ISSUE-3 tentpole surface).
+
+* the chunked device step (``paged_prefill_chunk``) run chunk by chunk
+  reproduces whole-prompt logits (vs the contiguous ``model.prefill``);
+* engines with chunked prefill generate EXACTLY the same tokens as
+  token-by-token teacher forcing through the paged decode step, for every
+  pool scheme and for ragged prompts whose lengths are multiples of
+  neither ``chunk_size`` nor ``block_size``;
+* a P-token prompt materializes in ceil(P/C) chunk dispatches, not P
+  decode steps;
+* HP stays rejected for step protection (one pointer per slot cannot cover
+  a chunk's pages — the interval property is the point of the paper);
+* a stress-marked case interleaves prefill and decode under 4 workers on
+  a sharded pool and checks token exactness + full reclamation.
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.blocks import BlockPool, Scheduler
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import ServeEngine, ServeRuntime
+from repro.serve.paged_model import (init_pools, paged_decode_step,
+                                     paged_prefill_chunk)
+
+POOL_SCHEMES = ("WFE", "HE", "EBR", "2GEIBR")
+#: ragged on purpose: no length is a multiple of chunk_size=4 OR
+#: block_size=4 (except by accident of the 1-token prompt)
+RAGGED_PROMPTS = [[5, 9, 2], [11, 3, 8, 1, 6], [7], [2, 4, 6, 8, 10, 12, 14],
+                  [9, 9, 1, 5, 3, 2, 8, 7, 4], [13, 1]]
+N_NEW = 5
+CHUNK = 4
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = get_smoke_config("stablelm-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def teacher_forced_tokens(dense_model):
+    """Token-by-token teacher forcing through the PAGED decode step — the
+    exact pre-chunking serve behavior, rebuilt by hand as the oracle."""
+    cfg, model, params = dense_model
+    bs = 4
+    out = []
+    for prompt in RAGGED_PROMPTS:
+        total = len(prompt) + N_NEW
+        nblk = -(-total // bs)
+        pools = init_pools(cfg, n_blocks=nblk, block_size=bs)
+        tables = jnp.arange(nblk, dtype=jnp.int32)[None, :]
+        gen = []
+        tok = prompt[0]
+        for pos in range(total - 1):
+            logits, pools = paged_decode_step(
+                cfg, params, pools, tables,
+                jnp.asarray([pos + 1], jnp.int32),
+                jnp.asarray([tok], jnp.int32),
+                jnp.asarray([pos], jnp.int32))
+            nxt = int(jnp.argmax(logits[0]))
+            if pos + 1 < len(prompt):
+                tok = prompt[pos + 1]  # teacher-force the prompt
+            else:
+                gen.append(nxt)
+                tok = nxt
+        out.append(gen)
+    return out
+
+
+# ======================================================= device-step level
+def test_prefill_chunks_match_whole_prompt_logits(dense_model):
+    """Chunk-by-chunk prefill == contiguous whole-prompt prefill, logits."""
+    cfg, model, params = dense_model
+    bs, c = 4, 3
+    prompt = [5, 9, 2, 11, 3, 8, 1, 6, 7, 2, 4]  # P=11: ragged vs bs AND c
+    p = len(prompt)
+    lg_ref, _ = model.prefill(params, jnp.asarray([prompt], jnp.int32),
+                              max_len=p + 1)
+
+    nblk = -(-p // bs)
+    pools = init_pools(cfg, n_blocks=nblk + 2, block_size=bs)
+    tables = jnp.arange(nblk, dtype=jnp.int32)[None, :]
+    ctx = 0
+    while ctx < p:
+        n = min(c, p - ctx)
+        toks = jnp.asarray([prompt[ctx:ctx + n]], jnp.int32)
+        pos = jnp.arange(ctx, ctx + n, dtype=jnp.int32)[None, :]
+        logits, pools = paged_prefill_chunk(cfg, params, pools, tables,
+                                            toks, pos)
+        ctx += n
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(lg_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_chunk_ragged_padding_rows(dense_model):
+    """Padded chunk rows (chunk_lens < C) scatter nothing and leave the
+    valid row's logits identical to the unpadded call."""
+    cfg, model, params = dense_model
+    bs = 4
+    prompt = [5, 9, 2, 11, 3]
+    pools = init_pools(cfg, n_blocks=4, block_size=bs)
+    tables = jnp.asarray([[0, 1]], jnp.int32)
+    toks = jnp.asarray([prompt], jnp.int32)
+    pos = jnp.arange(5, dtype=jnp.int32)[None, :]
+    lg_ref, pools_ref = paged_prefill_chunk(cfg, params, pools, tables,
+                                            toks, pos)
+    # same prompt padded to C=8 with garbage tokens + clamped positions
+    pad = jnp.asarray([prompt + [31, 31, 31]], jnp.int32)
+    pos_pad = jnp.minimum(jnp.arange(8), 4)[None, :].astype(jnp.int32)
+    lg_pad, pools_pad = paged_prefill_chunk(
+        cfg, params, pools, tables, pad, pos_pad,
+        jnp.asarray([5], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_pad), np.asarray(lg_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(pools_pad["k"][:, :2]),
+                               np.asarray(pools_ref["k"][:, :2]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ============================================================ engine level
+@pytest.mark.parametrize("scheme", POOL_SCHEMES)
+def test_engine_chunked_exact_tokens_all_schemes(dense_model, scheme,
+                                                 teacher_forced_tokens):
+    """Chunked engines emit byte-identical tokens to teacher forcing."""
+    cfg, model, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
+                         scheme=scheme, chunk_size=CHUNK,
+                         era_freq=2, cleanup_freq=2)
+    tid = engine.pool.register_thread()
+    reqs = [engine.submit(p, N_NEW) for p in RAGGED_PROMPTS]
+    stats = engine.run(tid)
+    assert stats["completed"] == len(RAGGED_PROMPTS)
+    for req, want in zip(reqs, teacher_forced_tokens):
+        assert req.generated == want, (scheme, req.rid, req.generated, want)
+    assert engine.pool.unreclaimed() == 0, scheme
+    assert engine.pool.free_blocks == 32, scheme
+
+
+def test_prefill_completes_in_ceil_p_over_c_steps(dense_model):
+    """A P-token prompt costs ceil(P/C) chunk dispatches, not P steps."""
+    cfg, model, params = dense_model
+    for p_len, c in ((13, 4), (8, 8), (9, 2), (5, 16)):
+        engine = ServeEngine(cfg, params, n_blocks=32, block_size=4,
+                             max_batch=4, chunk_size=c,
+                             era_freq=1, cleanup_freq=1)
+        tid = engine.pool.register_thread()
+        prompt = [1 + i % 7 for i in range(p_len)]
+        req = engine.submit(prompt, 3)
+        stats = engine.run(tid)
+        want_chunks = -(-p_len // c)
+        assert stats["prefill_chunks"] == want_chunks, (p_len, c, stats)
+        assert stats["prefill_tokens"] == p_len
+        # first token comes from the final chunk; the rest are decode steps
+        assert stats["steps"] == want_chunks + 3 - 1, (p_len, c, stats)
+        assert req.done
+
+
+def test_ttft_tpot_stamps(dense_model):
+    """Latency stamps: TTFT/TPOT become available once tokens flow."""
+    cfg, model, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
+                         chunk_size=4, era_freq=1, cleanup_freq=1)
+    tid = engine.pool.register_thread()
+    req = engine.submit([1, 2, 3, 4, 5], 4)
+    assert req.ttft is None and req.tpot is None
+    engine.run(tid)
+    assert req.ttft is not None and req.ttft >= 0
+    assert req.tpot is not None and req.tpot >= 0
+    assert req.t_last >= req.t_first >= req.t_submit
+
+
+def test_hp_rejected_for_step_protection():
+    """One HP slot protects ONE pointer — a chunk touching many pages
+    cannot be covered, so the pool must keep refusing scheme='HP'."""
+    with pytest.raises(ValueError, match="Hazard Pointers"):
+        BlockPool(8, scheme="HP", max_threads=2)
+
+
+# ======================================================== scheduler level
+def test_queue_property_snapshots_under_lock():
+    """Satellite: `Scheduler.queue` must snapshot under the queue lock —
+    concurrent submits during iteration used to raise RuntimeError."""
+    pool = BlockPool(16, max_threads=4, era_freq=1, cleanup_freq=1)
+    sched = Scheduler(pool, block_size=4, max_batch=4)
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                _ = sched.queue  # must never see a mutating deque
+        except Exception as e:  # pragma: no cover - the bug under test
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for i in range(3000):
+        sched.submit([1, 2], 1)
+    stop.set()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors, errors[0]
+    assert len(sched.queue) == 3000
+
+
+def test_bulk_alloc_all_or_nothing():
+    """alloc_blocks rolls back every popped slot when it cannot fill n."""
+    pool = BlockPool(8, max_threads=2, era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    from repro.blocks.block_pool import PoolExhausted
+    with pytest.raises(PoolExhausted):
+        pool.alloc_blocks(9, tid)
+    assert pool.free_blocks == 8, "failed bulk alloc leaked slots"
+    blks = pool.alloc_blocks(8, tid)
+    assert sorted(b.index for b in blks) == list(range(8))
+    assert pool.free_blocks == 0
+
+
+# ================================================================ stress
+@pytest.mark.stress
+def test_stress_prefill_decode_interleaved_4_workers(dense_model,
+                                                     teacher_forced_tokens):
+    """Prefill chunks + decode batches interleaved under 4 workers on a
+    sharded pool: exact tokens, merged stats, full reclamation."""
+    cfg, model, params = dense_model
+    prompts = RAGGED_PROMPTS * 3  # enough to keep all phases in flight
+    want = teacher_forced_tokens * 3
+    engine = ServeEngine(cfg, params, n_blocks=64, block_size=4, max_batch=4,
+                         n_shards=2, max_threads=8, max_inflight=8,
+                         chunk_size=CHUNK, era_freq=2, cleanup_freq=2)
+    reqs = [engine.submit(p, N_NEW) for p in prompts]
+    stats = ServeRuntime(engine, n_workers=4).serve()
+    assert stats["completed"] == len(prompts)
+    assert stats["unreclaimed"] == 0
+    assert stats["prefill_chunks"] >= sum(-(-len(p) // CHUNK)
+                                          for p in prompts)
+    for req, tokens in zip(reqs, want):
+        assert req.generated == tokens, (req.rid, req.generated, tokens)
+    assert engine.pool.free_blocks == 64, "stress run leaked pool slots"

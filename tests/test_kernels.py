@@ -19,7 +19,8 @@ except ModuleNotFoundError:
 
 from repro.kernels import ref
 from repro.kernels.era_scan import INF_ERA32, era_scan
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_chunk)
 
 jax.config.update("jax_enable_x64", False)
 
@@ -164,6 +165,67 @@ def test_paged_attention_table_permutation_invariance():
     tables2 = perm[tables].astype(jnp.int32)
     out2 = paged_attention(q, k2, v2, tables2, lengths, interpret=True)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ===================================================== paged chunk attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,c,kh,g,d,bs,nblk", [
+    (2, 4, 1, 4, 64, 16, 4),    # prefill chunk mid-prompt
+    (1, 8, 2, 2, 128, 8, 3),    # chunk crossing block boundaries
+    (3, 1, 2, 8, 64, 8, 4),     # C == 1 (the decode specialization)
+    (2, 5, 4, 1, 128, 32, 2),   # ragged C vs bs
+])
+def test_paged_chunk_attention_matches_ref(b, c, kh, g, d, bs, nblk, dtype):
+    key = jax.random.key(b * 1000 + c * 10 + d)
+    ks = jax.random.split(key, 5)
+    n = b * nblk + 3
+    q = jax.random.normal(ks[0], (b, c, kh, g, d), dtype)
+    k_pool = jax.random.normal(ks[1], (n, bs, kh, d), dtype)
+    v_pool = jax.random.normal(ks[2], (n, bs, kh, d), dtype)
+    perm = jax.random.permutation(ks[3], n)[: b * nblk].reshape(b, nblk)
+    tables = perm.astype(jnp.int32)
+    # chunk starts at a random context; queries at consecutive positions
+    ctx = jax.random.randint(ks[4], (b, 1), 0, nblk * bs - c + 1, jnp.int32)
+    qpos = ctx + jnp.arange(c, dtype=jnp.int32)[None, :]
+
+    got = paged_attention_chunk(q, k_pool, v_pool, tables, qpos,
+                                interpret=True)
+    want = ref.paged_attention_chunk_ref(q, k_pool, v_pool, tables, qpos)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_paged_chunk_attention_is_causal():
+    """Row i of a chunk must ignore pool tokens at positions > qpos[i]:
+    mutating those slots cannot change row i's output."""
+    b, c, kh, g, d, bs, nblk = 1, 4, 2, 2, 64, 8, 2
+    ks = jax.random.split(jax.random.key(3), 3)
+    n = nblk
+    q = jax.random.normal(ks[0], (b, c, kh, g, d), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (n, bs, kh, d), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (n, bs, kh, d), jnp.float32)
+    tables = jnp.arange(nblk, dtype=jnp.int32)[None, :]
+    ctx = 5
+    qpos = (ctx + jnp.arange(c, dtype=jnp.int32))[None, :]
+    out1 = ref.paged_attention_chunk_ref(q, k_pool, v_pool, tables, qpos)
+    # scribble over every pool position AFTER the last query's
+    flat_pos = jnp.arange(nblk * bs)
+    future = (flat_pos > ctx + c - 1).reshape(nblk, bs)
+    k2 = jnp.where(future[..., None, None], 1e3, k_pool)
+    v2 = jnp.where(future[..., None, None], -1e3, v_pool)
+    out2 = ref.paged_attention_chunk_ref(q, k2, v2, tables, qpos)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=0, atol=0)
+    out3 = paged_attention_chunk(q, k2, v2, tables, qpos, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out3),
+                               rtol=1e-5, atol=1e-5)
+    # and the decode wrapper equals the chunk's last row
+    dec = paged_attention(q[:, -1], k_pool, v_pool, tables,
+                          jnp.asarray([ctx + c], jnp.int32), interpret=True)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(out1[:, -1]),
                                rtol=1e-5, atol=1e-5)
 
 
