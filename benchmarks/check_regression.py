@@ -1,0 +1,126 @@
+"""Perf-regression gate: fresh serve_bench smoke JSON vs committed baseline.
+
+Pure-stdlib on purpose (no jax/numpy import): CI runs it right after the
+bench in the same job, and a broken runtime environment must fail in the
+BENCH step, not mask itself as a checker crash here.
+
+Usage (CI runs exactly this):
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --smoke --json serve_smoke.json
+    python benchmarks/check_regression.py serve_smoke.json
+
+Compares the headline latency medians (TTFT/TPOT p50 of the chunked
+prefill mode and of the cached prefix mode) against
+``benchmarks/baselines/serve_smoke.json`` with a multiplicative tolerance
+band: ``fresh <= baseline * tolerance`` per metric.  The band absorbs
+runner-to-runner variance; a genuine hot-path regression (recompiles in
+the serve loop, a lock where none belongs, reclamation stalling planning)
+blows through it.  Improvements always pass; a large one (beyond
+1/tolerance) prints a hint to refresh the committed baseline:
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --smoke \
+        --json benchmarks/baselines/serve_smoke.json
+
+The relative invariants (chunked TTFT speedup > 1, prefix hit-rate > 0)
+are also re-asserted from the fresh JSON — they are machine-independent
+and have NO tolerance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: (section, mode, metric-path) medians gated against the baseline
+GATED_METRICS = (
+    ("prefill_heavy", "chunked", "ttft"),
+    ("prefill_heavy", "chunked", "tpot"),
+    ("prefix_heavy", "cached", "ttft"),
+    ("prefix_heavy", "cached", "tpot"),
+)
+
+#: machine-independent invariants: (section, key, exclusive lower bound,
+#: description) — the bound lives HERE so a new invariant cannot silently
+#: inherit the wrong threshold
+INVARIANTS = (
+    ("prefill_heavy", "ttft_speedup", 1.0, "chunked prefill must win"),
+    ("prefix_heavy", "hit_rate", 0.0, "prefix cache must hit"),
+)
+
+
+def _p50(results: dict, section: str, mode: str, metric: str):
+    try:
+        return results[section][mode][metric]["p50_ms"]
+    except (KeyError, TypeError):
+        return None
+
+
+def check(fresh: dict, baseline: dict, tolerance: float) -> list:
+    """Returns a list of failure strings (empty = gate passes)."""
+    failures = []
+    for blob, name in ((fresh, "fresh"), (baseline, "baseline")):
+        if blob.get("schema") != "serve_bench/ttft_tpot/v1":
+            failures.append(f"{name}: bad schema {blob.get('schema')!r}")
+    if failures:
+        return failures
+
+    print(f"{'metric':>32s} {'baseline':>9s} {'fresh':>9s} {'ratio':>6s} "
+          f"{'limit':>6s} {'status':>7s}")
+    for section, mode, metric in GATED_METRICS:
+        base = _p50(baseline, section, mode, metric)
+        new = _p50(fresh, section, mode, metric)
+        label = f"{section}.{mode}.{metric}.p50_ms"
+        if base is None:
+            failures.append(f"{label}: missing from baseline")
+            continue
+        if new is None:
+            failures.append(f"{label}: missing from fresh results")
+            continue
+        ratio = new / base
+        ok = ratio <= tolerance
+        print(f"{label:>32s} {base:>9.2f} {new:>9.2f} {ratio:>5.2f}x "
+              f"{tolerance:>5.2f}x {'ok' if ok else 'FAIL':>7s}")
+        if not ok:
+            failures.append(
+                f"{label}: {new:.2f} ms vs baseline {base:.2f} ms "
+                f"({ratio:.2f}x > {tolerance:.2f}x tolerance)")
+        elif ratio < 1.0 / tolerance:
+            print(f"  note: {label} improved {1 / ratio:.2f}x — consider "
+                  f"refreshing benchmarks/baselines/serve_smoke.json")
+
+    for section, key, bound, why in INVARIANTS:
+        val = fresh.get(section, {}).get(key)
+        if val is None:
+            failures.append(f"{section}.{key}: missing from fresh results")
+        elif not val > bound:
+            failures.append(
+                f"{section}.{key} = {val}: must be > {bound} ({why})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="JSON written by serve_bench --smoke --json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/serve_smoke.json")
+    ap.add_argument("--tolerance", type=float, default=3.0,
+                    help="max allowed fresh/baseline latency ratio "
+                         "(default 3.0: wide enough for runner variance, "
+                         "tight enough to catch recompile-bound loops)")
+    args = ap.parse_args(argv)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(fresh, baseline, args.tolerance)
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        return 1
+    print("perf gate: all metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,9 +23,19 @@ Modes:
 
   PYTHONPATH=src python benchmarks/serve_bench.py --prefill-heavy --chunk-size 32
 
-* ``--smoke`` — a seconds-scale tiny-config prefill-heavy pass for CI,
-  emitting the TTFT/TPOT JSON schema (``--json PATH``) the bench
-  trajectory expects.
+* ``run_prefix_heavy()`` / ``--prefix-heavy`` — the prefix-caching
+  scenario: every prompt shares a system-prompt prefix and diverges in
+  its tail.  Reports the cache **hit-rate** (cached prompt tokens /
+  submitted prompt tokens — definition in docs/benchmarks.md), TTFT with
+  and without caching, and the prefill dispatches saved.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --prefix-heavy
+
+* ``--smoke`` — a seconds-scale tiny-config pass over BOTH scenarios for
+  CI, emitting the TTFT/TPOT JSON schema (``--json PATH``) the bench
+  trajectory and the perf-regression gate consume.  The bench validates
+  its own output (schema + required keys) and exits nonzero on a
+  mismatch — CI does not need to re-parse the JSON.
 """
 
 from __future__ import annotations
@@ -196,6 +206,90 @@ def run_prefill_heavy(chunk_size: int = 32, prompt_len: int = 96,
     return out
 
 
+# ------------------------------------------------------ prefix-heavy TTFT
+def run_prefix_heavy(chunk_size: int = 16, shared_len: int = 64,
+                     tail_len: int = 16, n_requests: int = 8,
+                     new_tokens: int = 4, block_size: int = 8,
+                     scheme: str = "WFE", build=_build_base) -> dict:
+    """Prefix caching on a shared-system-prompt workload.
+
+    Every prompt is ``shared_len`` identical system tokens plus a
+    divergent ``tail_len``-token user tail — the canonical serving shape
+    prefix caching exists for.  With caching, the first request prefills
+    the shared run and inserts it; every later request aliases those
+    pool blocks and prefills ONLY its tail (zero dispatches for the
+    cached chunks).  Reports hit-rate = cached prompt tokens / submitted
+    prompt tokens, TTFT/TPOT with and without caching, and the prefill
+    dispatch saving.  Each engine gets one untimed warmup pass (compiles
+    the shape buckets; the drain clears its cache) and one timed pass.
+    """
+    cfg, params = build()
+    prompt_len = shared_len + tail_len
+    n_blocks = n_requests * (-(-(prompt_len + new_tokens) // block_size)) + 8
+    shared = [1 + j % 29 for j in range(shared_len)]
+
+    def prompts():
+        return [shared + [2 + (i * 7 + j) % 23 for j in range(tail_len)]
+                for i in range(n_requests)]
+
+    total_prompt_tokens = n_requests * prompt_len
+    out: dict = {"shared_len": shared_len, "tail_len": tail_len,
+                 "new_tokens": new_tokens, "chunk_size": chunk_size,
+                 "scheme": scheme, "n_requests": n_requests}
+    print(f"\n### Prefix-heavy serving: {shared_len} shared + {tail_len} "
+          f"tail prompt tokens, {new_tokens} generated, chunk "
+          f"C={chunk_size} ({scheme})")
+    print(f"{'mode':>10s} {'ttft p50 ms':>12s} {'ttft p95 ms':>12s} "
+          f"{'tpot p50 ms':>12s} {'hit-rate':>9s} {'dispatches':>11s}")
+    for label, enabled in (("uncached", False), ("cached", True)):
+        engine = ServeEngine(cfg, params, n_blocks=n_blocks,
+                             block_size=block_size, max_batch=4,
+                             scheme=scheme, chunk_size=chunk_size,
+                             prefix_caching=enabled,
+                             era_freq=8, cleanup_freq=8)
+        tid = engine.pool.register_thread()
+        for p in prompts():  # warmup: compiles every shape bucket
+            engine.submit(p, new_tokens)
+        engine.run(tid)  # the final drain clears the warmup's cache
+        before = dict(engine.sched.stats)  # counters are cumulative
+        reqs = [engine.submit(p, new_tokens) for p in prompts()]
+        t0 = time.perf_counter()
+        engine.run(tid)
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        after = engine.sched.stats
+        row = latency_summary(reqs)
+        row["tok_s"] = n_requests * new_tokens / dt
+        row["dispatches"] = after["steps"] - before["steps"]
+        row["prefill_chunks"] = (after["prefill_chunks"]
+                                 - before["prefill_chunks"])
+        row["prefix_hits"] = after["prefix_hits"] - before["prefix_hits"]
+        hit_tokens = (after["prefix_hit_tokens"]
+                      - before["prefix_hit_tokens"])
+        row["hit_tokens"] = hit_tokens
+        row["hit_rate"] = hit_tokens / total_prompt_tokens
+
+        def fmt(x):  # tpot is None when new_tokens < 2
+            return f"{x:>12.1f}" if x is not None else f"{'-':>12s}"
+
+        out[label] = row
+        print(f"{label:>10s} {fmt(row['ttft']['p50_ms'])} "
+              f"{fmt(row['ttft']['p95_ms'])} {fmt(row['tpot']['p50_ms'])} "
+              f"{row['hit_rate']:>9.2f} {row['dispatches']:>11d}")
+    base, cached = out["uncached"], out["cached"]
+    out["hit_rate"] = cached["hit_rate"]
+    out["chunks_saved"] = base["prefill_chunks"] - cached["prefill_chunks"]
+    out["ttft_speedup"] = (base["ttft"]["p50_ms"]
+                           / cached["ttft"]["p50_ms"])
+    ok = cached["hit_rate"] > 0 and out["chunks_saved"] > 0
+    print(f"hit-rate {cached['hit_rate']:.2f}, {out['chunks_saved']} "
+          f"prefill dispatches saved, TTFT speedup (p50) "
+          f"{out['ttft_speedup']:.2f}x  "
+          f"[{'PASS' if ok else 'FAIL'}: cached prompts must share "
+          f"blocks and skip prefill work]")
+    return out
+
+
 def run_smoke(chunk_size: int = 8) -> dict:
     """Seconds-scale CI smoke: tiny config, short prompts, same schema."""
     return {
@@ -204,7 +298,48 @@ def run_smoke(chunk_size: int = 8) -> dict:
         "prefill_heavy": run_prefill_heavy(
             chunk_size=chunk_size, prompt_len=24, n_requests=4,
             new_tokens=3, block_size=4),
+        "prefix_heavy": run_prefix_heavy(
+            chunk_size=chunk_size, shared_len=16, tail_len=8,
+            n_requests=4, new_tokens=3, block_size=4),
     }
+
+
+#: required (section, mode, metric) shape of the ttft_tpot schema — the
+#: bench validates its OWN output and exits nonzero on a mismatch, so the
+#: CI gate never green-lights a silently malformed JSON
+_TTFT_SCHEMA_MODES = {"prefill_heavy": ("token_at_a_time", "chunked"),
+                      "prefix_heavy": ("uncached", "cached")}
+
+
+def validate_results(results: dict) -> list:
+    """Schema/shape check of a ttft_tpot results dict -> list of errors."""
+    errors = []
+    if results.get("schema") != "serve_bench/ttft_tpot/v1":
+        errors.append(f"bad schema: {results.get('schema')!r}")
+    present = [s for s in _TTFT_SCHEMA_MODES if s in results]
+    if not present:
+        errors.append("no scenario section (prefill_heavy/prefix_heavy)")
+    for section in present:
+        sec = results[section]
+        for mode in _TTFT_SCHEMA_MODES[section]:
+            if mode not in sec:
+                errors.append(f"{section}: missing mode {mode!r}")
+                continue
+            for metric in ("ttft", "tpot"):
+                row = sec[mode].get(metric)
+                if not isinstance(row, dict) or "p50_ms" not in row:
+                    errors.append(f"{section}.{mode}.{metric}: no p50_ms")
+                elif metric == "ttft" and row["p50_ms"] is None:
+                    # tpot p50 is legitimately None when < 2 tokens were
+                    # generated (--new-tokens 1); ttft never is
+                    errors.append(f"{section}.{mode}.ttft: p50_ms is None")
+            if "dispatches" not in sec[mode]:
+                errors.append(f"{section}.{mode}: missing dispatches")
+        headline = ("ttft_speedup" if section == "prefill_heavy"
+                    else "hit_rate")
+        if not isinstance(sec.get(headline), (int, float)):
+            errors.append(f"{section}: missing {headline}")
+    return errors
 
 
 # ------------------------------------------------------------- scaling matrix
@@ -322,6 +457,14 @@ def main(argv=None) -> int:
     ap.add_argument("--prefill-heavy", action="store_true",
                     help="run the chunked-prefill TTFT/TPOT scenario "
                          "instead of the scaling matrix")
+    ap.add_argument("--prefix-heavy", action="store_true",
+                    help="run the prefix-caching scenario (shared system "
+                         "prompt, divergent tails): hit-rate + TTFT "
+                         "with/without caching")
+    ap.add_argument("--shared-len", type=int, default=64,
+                    help="shared system-prompt length for --prefix-heavy")
+    ap.add_argument("--tail-len", type=int, default=16,
+                    help="divergent tail length for --prefix-heavy")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI pass: tiny config, emits the "
                          "TTFT/TPOT JSON schema")
@@ -335,7 +478,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.smoke:
         results = run_smoke(chunk_size=min(args.chunk_size, 8))
-        ok = results["prefill_heavy"]["ttft_speedup"] > 1.0
+        ok = (results["prefill_heavy"]["ttft_speedup"] > 1.0
+              and results["prefix_heavy"]["hit_rate"] > 0
+              and results["prefix_heavy"]["chunks_saved"] > 0)
     elif args.prefill_heavy:
         results = {"schema": "serve_bench/ttft_tpot/v1"}
         results["prefill_heavy"] = run_prefill_heavy(
@@ -343,6 +488,14 @@ def main(argv=None) -> int:
             n_requests=args.requests or 8,
             new_tokens=args.new_tokens or 4)
         ok = results["prefill_heavy"]["ttft_speedup"] > 1.0
+    elif args.prefix_heavy:
+        results = {"schema": "serve_bench/ttft_tpot/v1"}
+        results["prefix_heavy"] = run_prefix_heavy(
+            chunk_size=args.chunk_size, shared_len=args.shared_len,
+            tail_len=args.tail_len, n_requests=args.requests or 8,
+            new_tokens=args.new_tokens or 4)
+        ok = (results["prefix_heavy"]["hit_rate"] > 0
+              and results["prefix_heavy"]["chunks_saved"] > 0)
     else:
         if args.latency:
             run()
@@ -355,6 +508,15 @@ def main(argv=None) -> int:
         results = {"schema": "serve_bench/scaling/v1", "scaling": {
             f"{sc}_w{w}_s{s}": row for (sc, w, s), row in scaling.items()}}
         ok = True
+    if results["schema"] == "serve_bench/ttft_tpot/v1":
+        # self-validation: a malformed results dict (schema drift, missing
+        # keys, None medians) fails HERE with a nonzero exit — downstream
+        # consumers (the CI perf gate) never see a silently bad JSON
+        errors = validate_results(results)
+        if errors:
+            for e in errors:
+                print(f"SCHEMA ERROR: {e}")
+            ok = False
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)

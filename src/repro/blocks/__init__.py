@@ -3,6 +3,7 @@ integrated as a first-class serving feature — DESIGN.md §2.1(A))."""
 
 from .block_pool import BlockPool, KVBlock, PoolExhausted
 from .block_table import BlockTableRef, TableVersion
+from .prefix_cache import PrefixCache
 from .scheduler import Request, Scheduler
 from .sharded_pool import ShardedBlockPool
 
@@ -11,6 +12,7 @@ __all__ = [
     "BlockTableRef",
     "KVBlock",
     "PoolExhausted",
+    "PrefixCache",
     "Request",
     "Scheduler",
     "ShardedBlockPool",

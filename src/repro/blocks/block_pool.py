@@ -33,7 +33,7 @@ import threading
 from typing import Callable, List, Optional
 
 from repro.core import Block, make_scheme
-from repro.core.atomics import INF_ERA, AtomicRef, PtrView
+from repro.core.atomics import INF_ERA, AtomicInt, AtomicRef, PtrView
 
 __all__ = ["KVBlock", "BlockPool", "PoolExhausted"]
 
@@ -43,14 +43,23 @@ class PoolExhausted(RuntimeError):
 
 
 class KVBlock(Block):
-    """Reclamation header for one pool slot (paper Fig. 2)."""
+    """Reclamation header for one pool slot (paper Fig. 2).
 
-    __slots__ = ("index", "on_free")
+    ``sharers`` counts logical owners of the slot — the allocating
+    request plus, under prefix caching, every other request table and
+    cache entry aliasing it.  The count starts at 1 (the allocator) and
+    moves only by atomic fetch-and-add; the 1 -> 0 transition is observed
+    by exactly one releaser, which retires the block (last-sharer-retires,
+    see ``BlockPool.release_block``).
+    """
+
+    __slots__ = ("index", "on_free", "sharers")
 
     def __init__(self, index: int, on_free: Optional[Callable] = None):
         super().__init__()
         self.index = index
         self.on_free = on_free
+        self.sharers = AtomicInt(1)
 
     def _poison_payload(self) -> None:
         # Returning the slot to the free list IS the poison: any later read
@@ -195,6 +204,32 @@ class BlockPool:
 
     def retire(self, blk: KVBlock, tid: int) -> None:
         self.smr.retire(blk, tid)
+
+    # ------------------------------------------------- shared ownership
+    def add_sharer(self, blk: KVBlock) -> None:
+        """Add one logical owner (a table alias or prefix-cache entry).
+
+        Callers must already hold a reference (the count is provably > 0
+        at the increment), so no 0 -> 1 resurrection can race a retire.
+        """
+        blk.sharers.fa_add(1)
+
+    def release_block(self, blk: KVBlock, tid: int) -> bool:
+        """Drop one sharer reference; the LAST sharer retires the block.
+
+        One wait-free fetch-and-add per release: exactly one releaser
+        observes the 1 -> 0 transition and calls ``retire`` — concurrent
+        releases can neither double-retire nor leak.  Readers still inside
+        an era reservation that covers the block remain safe: the refcount
+        decides when the block is logically dead, the scheme's interval
+        scan decides when its slot is physically reusable.  Returns True
+        iff THIS release retired the block (cache eviction uses it to
+        tell progress from a no-op reference drop).
+        """
+        if blk.sharers.fa_add(-1) == 1:
+            self.retire(blk, tid)
+            return True
+        return False
 
     # ------------------------------------------------- SMR-managed metadata
     def alloc_node(self, cls, tid: int, *args, shard: Optional[int] = None,

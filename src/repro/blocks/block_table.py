@@ -38,7 +38,14 @@ class TableVersion(Block):
 
 
 class BlockTableRef:
-    """The mutable cell holding the current TableVersion for one request."""
+    """The mutable cell holding the current TableVersion for one request.
+
+    Prefix sharing: ``adopt_prefix`` constructs a new table version whose
+    prefix ALIASES shared blocks from the prefix cache, and
+    ``release_all`` drops per-block references instead of retiring
+    outright — a shared block outlives this request until its LAST sharer
+    releases it.
+    """
 
     def __init__(self, pool: BlockPool, tid: int, shard: Optional[int] = None):
         self._pool = pool
@@ -76,13 +83,34 @@ class BlockTableRef:
         self._pool.retire_node(old, tid)
         return blks
 
+    def adopt_prefix(self, tid: int, blocks: List[KVBlock]) -> None:
+        """Publish a version whose prefix ALIASES cached shared blocks.
+
+        Only valid on an empty table (a fresh or evicted-and-rewound
+        request); the caller owns one sharer reference per block — this
+        table takes them over and ``release_all`` drops them later.
+        """
+        old = self._ref.load()
+        assert not old.blocks, "adopt_prefix on a non-empty table"
+        new = self._pool.alloc_node(TableVersion, tid, tuple(blocks),
+                                    shard=self.shard)
+        self._ref.store(new)
+        self._pool.retire_node(old, tid)
+
     def release_all(self, tid: int) -> None:
-        """Retire every block + the table itself (request finished/evicted)."""
+        """Release every block + retire the table (request finished/evicted).
+
+        Blocks go through ``release_block`` — one sharer-reference drop
+        each — so a block shared with the prefix cache (or another
+        request's table) survives until its last sharer releases it, and
+        that last release retires it exactly once.  Table-version nodes
+        are never shared; they retire directly.
+        """
         old = self._ref.load()
         empty = self._pool.alloc_node(TableVersion, tid, (), shard=self.shard)
         self._ref.store(empty)
         for blk in old.blocks:
-            self._pool.retire(blk, tid)
+            self._pool.release_block(blk, tid)
         self._pool.retire_node(old, tid)
 
     def __len__(self) -> int:

@@ -55,7 +55,8 @@ __all__ = ["Request", "StepPlan", "Scheduler"]
 #: every per-worker stats dict carries these keys (merged by ``stats``)
 STAT_KEYS = ("admitted", "completed", "evictions", "steps",
              "deadline_cutoffs", "reclaimed", "prefill_chunks",
-             "prefill_tokens")
+             "prefill_tokens", "prefix_lookups", "prefix_hits",
+             "prefix_hit_tokens", "prefix_evictions")
 
 
 @dataclass
@@ -70,6 +71,10 @@ class Request:
     evictions: int = 0
     inflight: bool = False  # a device step for this request is outstanding
     shard: int = 0  # pool/device shard this request's pages live in
+    # one prefix-cache lookup per admission: a pressure-starved request
+    # must not re-walk the deepest-match keys every tick (reset on
+    # eviction rewind — the re-run is cache-eligible again)
+    prefix_checked: bool = False
     # latency stamps (time.monotonic): TTFT = t_first - t_submit,
     # TPOT = (t_last - t_first) / (len(generated) - 1)
     t_submit: float = 0.0
@@ -137,9 +142,15 @@ class StepPlan:
 class Scheduler:
     def __init__(self, pool, *, block_size: int, max_batch: int,
                  max_inflight: int = 4, deadline_ms: float = 50.0,
-                 chunk_size: int = 16):
+                 chunk_size: int = 16, prefix_cache=None):
         self.pool = pool
         self.block_size = block_size
+        # refcounted prefix cache (blocks/prefix_cache.py), or None: the
+        # prefill planner consults it before a request's FIRST chunk (the
+        # latest moment — prompts admitted together still hit runs the
+        # first finisher inserted), `complete` inserts materialized
+        # prompts, and pool pressure evicts cache entries before requests
+        self.prefix_cache = prefix_cache
         self.max_batch = max_batch
         self.max_inflight = max_inflight
         self.deadline_ms = deadline_ms
@@ -300,6 +311,8 @@ class Scheduler:
                         req.table.append_block(tid)
                         got = True
                     except PoolExhausted:
+                        if self._evict_cache_entry(tid, shard, stats):
+                            continue  # cache-only blocks freed; retry
                         victim = self._pick_victim(exclude=req, shard=shard)
                         if victim is None:
                             break  # req is the newest; it waits this tick
@@ -337,16 +350,58 @@ class Scheduler:
         return StepPlan(slot, runnable, tokens, positions, tables, lengths,
                         shard=shard)
 
+    def _evict_cache_entry(self, tid: int, shard: int,
+                           stats: Dict[str, int]) -> bool:
+        """Under pool pressure, drop one LRU prefix-cache entry first.
+
+        Reclaiming cache-only blocks is free; preempting a victim request
+        redoes its prefill.  Blocks still aliased by live requests merely
+        lose the cache's reference (shared blocks are not victims — the
+        last sharer still retires them exactly once).
+        """
+        if self.prefix_cache is None:
+            return False
+        cache_shard = shard if self.n_shards > 1 else None
+        if not self.prefix_cache.evict_lru(tid, shard=cache_shard):
+            return False
+        stats["prefix_evictions"] += 1
+        return True
+
+    def _consult_prefix_cache(self, req: Request, tid: int, shard: int,
+                              stats: Dict[str, int]) -> None:
+        """Alias a cached block run into ``req``'s (empty) table.
+
+        The prefill cursor jumps to the cached boundary, so the cached
+        chunks cost ZERO prefill dispatches and the device step never
+        re-scatters a cached page.  Runs before the request's first chunk
+        — also on re-admission after eviction (the rewound cursor makes
+        the rematerialization itself cache-eligible).
+        """
+        if self.prefix_cache is None or req.prefix_checked \
+                or req.length != 0 or len(req.table) != 0:
+            return
+        req.prefix_checked = True
+        stats["prefix_lookups"] += 1
+        blocks = self.prefix_cache.acquire(req.prompt, shard=shard)
+        if not blocks:
+            return
+        req.table.adopt_prefix(tid, blocks)
+        req.length = len(blocks) * self.block_size
+        stats["prefix_hits"] += 1
+        stats["prefix_hit_tokens"] += req.length
+
     def _plan_prefill(self, req: Request, tid: int, shard: int,
                       stats: Dict[str, int]) -> Optional[StepPlan]:
         """Plan one prefill chunk for ``req`` (up to the token budget).
 
         Bulk-allocates every page the chunk needs in ONE table version
         (``append_blocks`` → ``alloc_blocks``, atomic under pressure).
-        Under exhaustion: LIFO-evict, retry; with no victim left, shrink
-        the chunk to the capacity of pages the request already owns; with
-        zero capacity, yield (None) so the tick can run something else.
+        Under exhaustion: evict a prefix-cache entry, else LIFO-evict a
+        request, retry; with no victim left, shrink the chunk to the
+        capacity of pages the request already owns; with zero capacity,
+        yield (None) so the tick can run something else.
         """
+        self._consult_prefix_cache(req, tid, shard, stats)
         ctx = req.length
         n = min(self.chunk_size, len(req.prompt) - ctx)
         need = -(-(ctx + n) // self.block_size) - len(req.table)
@@ -355,6 +410,8 @@ class Scheduler:
                 req.table.append_blocks(tid, need)
                 need = 0
             except PoolExhausted:
+                if self._evict_cache_entry(tid, shard, stats):
+                    continue  # cache-only blocks freed; retry the alloc
                 victim = self._pick_victim(exclude=req, shard=shard)
                 if victim is None:
                     # newest non-inflight request is us: shrink the chunk
@@ -402,6 +459,15 @@ class Scheduler:
                 req.inflight = False
                 req.length += plan.n_tokens
                 if req.length >= len(req.prompt):
+                    if self.prefix_cache is not None:
+                        # register every block-aligned prefix of the now
+                        # fully-materialized prompt — BEFORE the request
+                        # can finish and release its references (the
+                        # cache increments sharer counts while they are
+                        # provably nonzero)
+                        self.prefix_cache.insert(
+                            req.prompt, req.table.current().blocks,
+                            tid, shard=req.shard)
                     self._append_token(req, int(sampled[0]), tid, stats)
             else:
                 for req, tok in zip(plan.requests, sampled):
@@ -477,6 +543,7 @@ class Scheduler:
         req.t_first = None
         req.t_last = None
         req.state = "queued"
+        req.prefix_checked = False  # the re-run may hit the cache anew
         req.evictions += 1
         self.active.remove(req)
         with self._qlock:

@@ -139,6 +139,15 @@ class ShardedBlockPool:
         # the home shard's clock stamped alloc_era; retire on the same clock
         self.shards[blk.home_shard].retire(blk, tid)
 
+    # ------------------------------------------------- shared ownership
+    def add_sharer(self, blk: KVBlock) -> None:
+        self.shards[blk.home_shard].add_sharer(blk)
+
+    def release_block(self, blk: KVBlock, tid: int) -> bool:
+        """Last-sharer-retires, routed to the block's home shard (the
+        retire must stamp the same clock that stamped ``alloc_era``)."""
+        return self.shards[blk.home_shard].release_block(blk, tid)
+
     # ------------------------------------------------- SMR-managed metadata
     def alloc_node(self, cls, tid: int, *args, shard: Optional[int] = None,
                    **kwargs) -> Block:

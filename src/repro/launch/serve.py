@@ -52,6 +52,11 @@ def main(argv=None) -> int:
                     help="prefill chunk token budget: a P-token prompt "
                          "materializes in ceil(P/C) device steps (1 = "
                          "token-at-a-time)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the refcounted prefix cache (prompts "
+                         "sharing a block-aligned prefix alias the same "
+                         "pool pages; cached chunks cost zero prefill "
+                         "dispatches)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -71,6 +76,7 @@ def main(argv=None) -> int:
                          max_threads=max(8, args.workers + 1),
                          max_inflight=max(4, args.workers),
                          chunk_size=args.chunk_size,
+                         prefix_caching=not args.no_prefix_cache,
                          **smr_kwargs)
     reqs = []
     for i in range(args.requests):
@@ -94,6 +100,13 @@ def main(argv=None) -> int:
         print(f"TTFT p50 {1e3 * ttfts[len(ttfts) // 2]:.1f} ms"
               + (f" | TPOT p50 {1e3 * tpots[len(tpots) // 2]:.2f} ms"
                  if tpots else ""))
+    if stats.get("prefix_lookups"):
+        total = sum(len(r.prompt) for r in reqs)
+        print(f"prefix cache: {stats['prefix_hits']}/"
+              f"{stats['prefix_lookups']} hits, "
+              f"{stats['prefix_hit_tokens']} cached tokens "
+              f"(hit-rate {stats['prefix_hit_tokens'] / total:.2f} "
+              f"of {total} prompt tokens)")
     print("scheduler:", stats)
     print("pool:", engine.pool.stats())
     return 0

@@ -16,6 +16,13 @@ table-width buckets, and both plan kinds share the per-shard device locks
 — multi-worker pipelining overlaps a prefill chunk on one shard with
 decode batches on others.
 
+Prefix caching (``prefix_caching=True``, the default): prompts sharing a
+block-aligned token prefix alias the same pool pages via the refcounted
+``PrefixCache`` — the prefill cursor starts at the cached boundary, so
+cached chunks cost ZERO dispatches and the device step never re-scatters
+a cached page.  ``drain`` clears the cache first (cache references must
+not pin slots past shutdown), restoring the every-block-freed invariant.
+
 Greedy sampling; each plan kind dispatches through one jitted function.
 ``use_kernel=True`` accelerates BOTH compute paths: paged decode attention
 takes the Pallas kernel AND reclamation takes the Pallas ``era_scan``
@@ -51,7 +58,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.blocks import BlockPool, Scheduler, ShardedBlockPool
+from repro.blocks import (BlockPool, PrefixCache, Scheduler,
+                          ShardedBlockPool)
 from repro.models.common import ArchConfig
 
 from .paged_model import init_pools, paged_decode_step, paged_prefill_chunk
@@ -116,6 +124,8 @@ class ServeEngine:
                  max_threads: int = 8, n_shards: int = 1,
                  max_inflight: int = 4, merge_freq: int = 1,
                  pad_shapes: bool = True, chunk_size: int = 16,
+                 prefix_caching: bool = True,
+                 prefix_cache_entries: Optional[int] = None,
                  **smr_kwargs):
         self.cfg = cfg
         self.params = params
@@ -136,10 +146,20 @@ class ServeEngine:
                                          merge_freq=merge_freq, **pool_kwargs)
         else:
             self.pool = BlockPool(n_blocks, **pool_kwargs)
+        # refcounted prefix cache: prompts sharing a block-aligned token
+        # prefix alias the same pool pages (zero prefill dispatches for
+        # the cached chunks); the LAST sharer retires a block, and the
+        # era reservations keep retired pages safe against in-flight
+        # readers — see blocks/prefix_cache.py and docs/serving.md
+        self.prefix_cache = (
+            PrefixCache(self.pool, block_size=block_size,
+                        max_entries=prefix_cache_entries)
+            if prefix_caching else None)
         self.sched = Scheduler(self.pool, block_size=block_size,
                                max_batch=max_batch,
                                max_inflight=max_inflight,
-                               chunk_size=chunk_size)
+                               chunk_size=chunk_size,
+                               prefix_cache=self.prefix_cache)
         # ONE device-pool chain per shard: a step's functional KV update
         # depends on the previous value of the pools it touches, so a
         # single chain serializes every step's compute.  Request-level
@@ -286,6 +306,11 @@ class ServeEngine:
         a nonzero return value means a reservation is genuinely still held.
         """
         pool = self.pool
+        if self.prefix_cache is not None:
+            # the cache's sharer references would otherwise pin cached
+            # pool slots past shutdown; dropping them retires every
+            # block whose last sharer was the cache
+            self.prefix_cache.clear(tid)
         stalled = 0
         while pool.unreclaimed() > 0:
             freed = pool.cleanup_all()

@@ -127,6 +127,12 @@ def paged_prefill_chunk(cfg, params, pools, tables, tokens, positions,
     or ``S % block_size == 0`` restriction: any ragged tail of any prompt
     can be a chunk.
 
+    Prefix-cache hits never reach this function: the scheduler starts the
+    chunk at the cached boundary (positions >= the shared prefix), so a
+    cached page is read through the table like any prior-context page but
+    its K/V are NEVER re-scattered — the scatter skip is structural, not
+    masked.
+
     tables (B, nblk) i32; tokens/positions (B, C) i32 (positions are
     absolute: ``ctx + i`` for a chunk starting at context length ctx);
     chunk_lens (B,) i32 — valid tokens per row (None = all C; padded rows

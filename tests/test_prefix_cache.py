@@ -1,0 +1,320 @@
+"""Prefix-cache correctness suite (the ISSUE-4 tentpole surface).
+
+* **last-sharer-retires-exactly-once**: N threads concurrently dropping
+  their references to the same shared blocks produce exactly ONE retire
+  per block — no double-retire (the pool's double-free assertion would
+  fire), no leak (everything reclaims at quiescence) — for every pool
+  scheme;
+* **logits exactness**: a prefill chunk reading CACHED pages produces
+  bitwise-identical logits to the same chunk reading pages the request
+  scattered itself (the cache aliases pool slots, it never recomputes);
+* **token exactness**: engines with caching on emit the same tokens as
+  engines with caching off, while issuing ZERO prefill dispatches for the
+  cached chunks;
+* **drain**: `unreclaimed == 0` and every pool slot free after the final
+  drain even with cross-request sharing, for all four schemes (the drain
+  clears the cache's references first);
+* pool pressure evicts cache entries before preempting requests, and a
+  stress-marked case shares prefixes across 4 workers on a sharded pool.
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.blocks import BlockPool, PrefixCache
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import ServeEngine, ServeRuntime
+from repro.serve.paged_model import init_pools, paged_prefill_chunk
+
+POOL_SCHEMES = ("WFE", "HE", "EBR", "2GEIBR")
+BS = 4  # pool block size used throughout
+SHARED = [1 + j % 13 for j in range(8)]  # block-aligned shared prefix
+
+
+def _prompts(n=4, tail=5):
+    """n prompts sharing SHARED, diverging in a ragged tail."""
+    return [SHARED + [2 + (i * 5 + j) % 11 for j in range(tail)]
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = get_smoke_config("stablelm-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def uncached_tokens(dense_model):
+    """Oracle: the same workload served with caching OFF."""
+    cfg, model, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=48, block_size=BS,
+                         max_batch=4, chunk_size=4, prefix_caching=False,
+                         era_freq=2, cleanup_freq=2)
+    tid = engine.pool.register_thread()
+    reqs = [engine.submit(p, 4) for p in _prompts()]
+    engine.run(tid)
+    assert all(r.done for r in reqs)
+    return [r.generated for r in reqs]
+
+
+# ===================================================== refcount level
+@pytest.mark.parametrize("scheme", POOL_SCHEMES)
+def test_last_sharer_retires_exactly_once(scheme):
+    """N threads concurrently releasing shared blocks: exactly one retire
+    per block, no double-free, full reclamation at quiescence."""
+    n_threads, n_blocks = 6, 16
+    pool = BlockPool(n_blocks, scheme=scheme, max_threads=n_threads + 1,
+                     era_freq=1, cleanup_freq=10_000)
+    t0 = pool.register_thread()
+    blocks = pool.alloc_blocks(n_blocks, t0)
+    # every thread owns one reference per block (the allocator's initial
+    # reference is handed to thread 0)
+    for blk in blocks:
+        for _ in range(n_threads - 1):
+            pool.add_sharer(blk)
+        assert blk.sharers.load() == n_threads
+    tids = [t0] + [pool.register_thread() for _ in range(n_threads - 1)]
+    barrier = threading.Barrier(n_threads)
+
+    def releaser(tid):
+        barrier.wait()  # all threads release concurrently
+        for blk in blocks:
+            pool.release_block(blk, tid)
+
+    threads = [threading.Thread(target=releaser, args=(tid,))
+               for tid in tids]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not any(t.is_alive() for t in threads)
+    # exactly one retire per block, whichever thread lost the race
+    assert sum(pool.smr.retire_count) == n_blocks, scheme
+    assert all(blk.sharers.load() == 0 for blk in blocks)
+    # quiescent: everything reclaims (double-free would assert in free())
+    for _ in range(8):
+        if pool.unreclaimed() == 0:
+            break
+        pool.advance_eras(t0)
+        pool.cleanup_all()
+    assert pool.unreclaimed() == 0, scheme
+    assert pool.free_blocks == n_blocks, scheme
+
+
+def test_shared_block_survives_partial_release():
+    """A block with remaining sharers is NOT retired (shared blocks are
+    never victims); only the last release retires it."""
+    pool = BlockPool(4, era_freq=1, cleanup_freq=10_000)
+    tid = pool.register_thread()
+    blk = pool.alloc(tid)
+    pool.add_sharer(blk)
+    pool.add_sharer(blk)  # three owners
+    pool.release_block(blk, tid)
+    pool.release_block(blk, tid)
+    assert sum(pool.smr.retire_count) == 0
+    assert not blk.freed
+    pool.release_block(blk, tid)  # last sharer
+    assert sum(pool.smr.retire_count) == 1
+    pool.cleanup(tid)
+    assert pool.free_blocks == 4
+
+
+# ======================================================== cache level
+def test_cache_acquire_insert_evict_refcounts():
+    """Unit walk of PrefixCache: chunk-aligned keys, deepest-match
+    acquire, per-entry references, LRU eviction, clear."""
+    pool = BlockPool(16, era_freq=1, cleanup_freq=10_000)
+    tid = pool.register_thread()
+    cache = PrefixCache(pool, block_size=BS)
+    prompt = list(range(1, 14))  # 13 tokens -> 3 full pages
+    blocks = pool.alloc_blocks(4, tid)
+
+    # producer cap: 13 // 4 = 3 pages cacheable -> entries at depths 1..3
+    assert cache.insert(prompt, blocks, tid) == 3
+    assert len(cache) == 3
+    # block 0 is named by all three entries, block 2 by one
+    assert blocks[0].sharers.load() == 1 + 3
+    assert blocks[2].sharers.load() == 1 + 1
+    assert blocks[3].sharers.load() == 1  # partial page: never cached
+
+    # consumer cap: an identical prompt may hit (13-1)//4 = 3 pages
+    run = cache.acquire(prompt)
+    assert [b.index for b in run] == [b.index for b in blocks[:3]]
+    assert blocks[0].sharers.load() == 1 + 3 + 1
+    # a prompt diverging inside page 2 hits the 2-page entry
+    run2 = cache.acquire(prompt[:8] + [99, 98, 97, 96, 95])
+    assert len(run2) == 2
+    # a prompt diverging at token 0 misses
+    assert cache.acquire([99] + prompt[1:]) == []
+    assert cache.stats()["hits"] == 2 and cache.stats()["lookups"] == 3
+
+    # drop the consumers' references, then the producer's
+    for b in run:
+        pool.release_block(b, tid)
+    for b in run2:
+        pool.release_block(b, tid)
+    for b in blocks:
+        pool.release_block(b, tid)
+    assert sum(pool.smr.retire_count) == 1  # only the uncached partial page
+    # pressure eviction keeps dropping LRU entries until a block actually
+    # retires: the depth-1 entry frees nothing (deeper entries still pin
+    # its block), so ONE call sweeps on to the depth-3 entry (depth 2 was
+    # touched more recently by the second acquire) and retires block 2
+    assert cache.evict_lru(tid) == 1
+    assert len(cache) == 1  # the recently-used depth-2 entry survives
+    assert cache.clear(tid) == 1  # drops blocks 0 and 1 -> retired
+    assert sum(pool.smr.retire_count) == 4  # every block exactly once
+    pool.cleanup(tid)
+    assert pool.free_blocks == 16
+
+
+def test_cache_capacity_overflow_evicts_lru():
+    """max_entries overflow evicts the LRU entry at insert time, and any
+    retires land in the INSERTING thread's retire list (single-writer
+    discipline — tid 0's lists must stay untouched)."""
+    pool = BlockPool(8, era_freq=1, cleanup_freq=10_000)
+    pool.register_thread()  # tid 0 stays idle throughout
+    tid = pool.register_thread()
+    cache = PrefixCache(pool, block_size=BS, max_entries=2)
+    blocks = pool.alloc_blocks(3, tid)
+    assert cache.insert(list(range(12)), blocks, tid) == 3
+    # the shallowest (LRU) entry was evicted to hold the capacity
+    assert len(cache) == 2 and cache.stats()["evicted_entries"] == 1
+    for b in blocks:
+        pool.release_block(b, tid)  # surviving entries keep all 3 alive
+    assert sum(pool.smr.retire_count) == 0
+    assert cache.clear(tid) == 2
+    assert pool.smr.retire_count[tid] == 3  # one retire per block, by tid
+    assert pool.smr.retire_count[0] == 0
+    pool.cleanup(tid)
+    assert pool.free_blocks == 8
+
+
+# ====================================================== device level
+def test_cached_prefill_logits_exact(dense_model):
+    """A tail chunk attending over CACHED pages == the same chunk over
+    self-scattered pages: the cache aliases slots, logits are bitwise."""
+    cfg, model, params = dense_model
+    prompt = SHARED + [3, 7, 2, 9, 4]  # 8 shared + 5 tail = 13
+    hit = len(SHARED)  # block-aligned cached boundary
+    nblk = -(-len(prompt) // BS)
+
+    def prefill(pools, tables, tokens, ctx):
+        toks = jnp.asarray([tokens], jnp.int32)
+        pos = jnp.arange(ctx, ctx + len(tokens), dtype=jnp.int32)[None, :]
+        return paged_prefill_chunk(cfg, params, pools, tables, toks, pos)
+
+    n_tail = nblk - hit // BS  # tail pages past the cached boundary
+    # producer: materialize the shared prefix into pages 0..1
+    pools = init_pools(cfg, n_blocks=2 * nblk + n_tail, block_size=BS)
+    prod_tbl = jnp.arange(nblk, dtype=jnp.int32)[None, :]
+    _, pools = prefill(pools, prod_tbl, prompt[:hit], 0)
+
+    # uncached consumer: re-scatters the prefix into its OWN pages, then
+    # runs the tail chunk (same chunk boundary as the cached consumer)
+    own_tbl = jnp.arange(nblk, 2 * nblk, dtype=jnp.int32)[None, :]
+    _, pools = prefill(pools, own_tbl, prompt[:hit], 0)
+    lg_own, pools = prefill(pools, own_tbl, prompt[hit:], hit)
+
+    # cached consumer: table prefix ALIASES the producer's pages; only
+    # the tail scatters (into fresh pages)
+    shared_tbl = jnp.concatenate(
+        [prod_tbl[0, :hit // BS],
+         jnp.arange(2 * nblk, 2 * nblk + n_tail, dtype=jnp.int32)])[None, :]
+    lg_cached, _ = prefill(pools, shared_tbl, prompt[hit:], hit)
+
+    np.testing.assert_array_equal(np.asarray(lg_cached), np.asarray(lg_own))
+
+
+# ====================================================== engine level
+@pytest.mark.parametrize("scheme", POOL_SCHEMES)
+def test_engine_cached_tokens_identical_all_schemes(dense_model, scheme,
+                                                    uncached_tokens):
+    """Caching on == caching off, token for token, with real hits and
+    full reclamation at drain — for every pool scheme."""
+    cfg, model, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=48, block_size=BS,
+                         max_batch=4, chunk_size=4, scheme=scheme,
+                         era_freq=2, cleanup_freq=2)
+    tid = engine.pool.register_thread()
+    reqs = [engine.submit(p, 4) for p in _prompts()]
+    stats = engine.run(tid)
+    for req, want in zip(reqs, uncached_tokens):
+        assert req.generated == want, (scheme, req.rid)
+    assert stats["prefix_hits"] == 3, (scheme, stats)  # all but the first
+    assert stats["prefix_hit_tokens"] == 3 * len(SHARED)
+    # token conservation: every prompt token prefilled OR cache-served
+    total = sum(len(p) for p in _prompts())
+    assert stats["prefill_tokens"] + stats["prefix_hit_tokens"] == total
+    assert engine.pool.unreclaimed() == 0, scheme
+    assert engine.pool.free_blocks == 48, scheme
+
+
+def test_second_request_zero_dispatches_for_cached_chunks(dense_model):
+    """A second identical-prompt request prefills ONLY past the cached
+    boundary: ceil((P - hit) / C) chunks instead of ceil(P / C)."""
+    cfg, model, params = dense_model
+    p_len, c = 13, 4
+    prompt = [1 + i % 7 for i in range(p_len)]
+    hit = (p_len - 1) // BS * BS  # deepest cacheable boundary
+    engine = ServeEngine(cfg, params, n_blocks=32, block_size=BS,
+                         max_batch=4, chunk_size=c,
+                         era_freq=2, cleanup_freq=2)
+    tid = engine.pool.register_thread()
+    r1, r2 = engine.submit(prompt, 3), engine.submit(prompt, 3)
+    stats = engine.run(tid)
+    assert r1.generated == r2.generated
+    want = -(-p_len // c) + -(-(p_len - hit) // c)
+    assert stats["prefill_chunks"] == want, stats
+    assert stats["prefill_tokens"] == 2 * p_len - hit
+    assert stats["prefix_hit_tokens"] == hit
+
+
+def test_pool_pressure_evicts_cache_before_requests(dense_model,
+                                                    uncached_tokens):
+    """A pool too small to hold the cache + live tables evicts cache
+    entries (free!) and still completes with exact tokens."""
+    cfg, model, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=6, block_size=BS,
+                         max_batch=2, chunk_size=4,
+                         era_freq=1, cleanup_freq=1)
+    tid = engine.pool.register_thread()
+    reqs = [engine.submit(p, 4) for p in _prompts()]
+    stats = engine.run(tid)
+    assert all(r.done for r in reqs)
+    for req, want in zip(reqs, uncached_tokens):
+        assert req.generated == want
+    assert stats["prefix_evictions"] >= 1, stats
+    assert engine.pool.unreclaimed() == 0
+    assert engine.pool.free_blocks == 6
+
+
+# ============================================================ stress
+@pytest.mark.stress
+def test_stress_shared_prefixes_4_workers_sharded(dense_model,
+                                                  uncached_tokens):
+    """Concurrent sharing across 4 workers on a sharded pool: repeated
+    shared-prefix prompts, exact tokens, exactly-once retirement (any
+    double-retire would assert in free()), full reclamation."""
+    cfg, model, params = dense_model
+    reps = 3
+    engine = ServeEngine(cfg, params, n_blocks=96, block_size=BS,
+                         max_batch=4, n_shards=2, max_threads=8,
+                         max_inflight=8, chunk_size=4,
+                         era_freq=2, cleanup_freq=2)
+    reqs = [engine.submit(p, 4) for p in _prompts() * reps]
+    stats = ServeRuntime(engine, n_workers=4).serve()
+    assert stats["completed"] == 4 * reps
+    for req, want in zip(reqs, uncached_tokens * reps):
+        assert req.generated == want, (req.rid, req.generated, want)
+    # per-shard caches: at least the same-shard repeats must hit
+    assert stats["prefix_hits"] > 0
+    assert stats["unreclaimed"] == 0
+    assert engine.pool.free_blocks == 96, "stress run leaked pool slots"
