@@ -10,20 +10,25 @@ Usage (CI runs exactly this):
     python benchmarks/check_regression.py serve_smoke.json
 
 Compares the headline latency medians (TTFT/TPOT p50 of the chunked
-prefill mode and of the cached prefix mode) against
-``benchmarks/baselines/serve_smoke.json`` with a multiplicative tolerance
-band: ``fresh <= baseline * tolerance`` per metric.  The band absorbs
-runner-to-runner variance; a genuine hot-path regression (recompiles in
-the serve loop, a lock where none belongs, reclamation stalling planning)
-blows through it.  Improvements always pass; a large one (beyond
-1/tolerance) prints a hint to refresh the committed baseline:
+prefill mode, the cached prefix mode, and the coarse-bucket decode-heavy
+mode) against ``benchmarks/baselines/serve_smoke.json`` with a
+multiplicative tolerance band: ``fresh <= baseline * tolerance`` per
+metric.  The band absorbs runner-to-runner variance; a genuine hot-path
+regression (recompiles in the serve loop, a lock where none belongs,
+reclamation stalling planning) blows through it.  Improvements always
+pass; a large one (beyond 1/tolerance) prints a hint to refresh the
+committed baseline:
 
     PYTHONPATH=src python benchmarks/serve_bench.py --smoke \
         --json benchmarks/baselines/serve_smoke.json
 
-The relative invariants (chunked TTFT speedup > 1, prefix hit-rate > 0)
-are also re-asserted from the fresh JSON — they are machine-independent
-and have NO tolerance.
+The relative invariants (chunked TTFT speedup > 1, prefix hit-rate > 0,
+coarse buckets saving recompiles and staying within a fixed per-shape
+compile budget) are also re-asserted from the fresh JSON — they are
+machine-independent and have NO tolerance.  The compile-count bounds are
+the bucket-policy gate: a regression that reintroduces per-shape
+recompiles (e.g. bucketing on the current width again) shows up as a
+compile count the budget rejects, regardless of runner speed.
 """
 
 from __future__ import annotations
@@ -38,6 +43,8 @@ GATED_METRICS = (
     ("prefill_heavy", "chunked", "tpot"),
     ("prefix_heavy", "cached", "ttft"),
     ("prefix_heavy", "cached", "tpot"),
+    ("decode_heavy", "coarse", "ttft"),
+    ("decode_heavy", "coarse", "tpot"),
 )
 
 #: machine-independent invariants: (section, key, exclusive lower bound,
@@ -47,6 +54,15 @@ INVARIANTS = (
     ("prefill_heavy", "ttft_speedup", 1.0, "chunked prefill must win"),
     ("prefix_heavy", "hit_rate", 0.0, "prefix cache must hit"),
 )
+
+#: compile-count budget for the coarse bucket policy in the decode-heavy
+#: scenario: one decode bucket + one prefill bucket per request size
+#: class that arrives cold, plus slack for a prefix-shrunken chunk shape.
+#: Counted via the jitted steps' per-shape cache sizes — a bucket-policy
+#: regression that recompiles per CURRENT width walks the whole pow2
+#: ladder (4+ shapes in the smoke scenario, measured 2 for coarse) and
+#: blows this budget even on an arbitrarily fast runner.
+MAX_COARSE_COMPILES = 3
 
 
 def _p50(results: dict, section: str, mode: str, metric: str):
@@ -96,6 +112,34 @@ def check(fresh: dict, baseline: dict, tolerance: float) -> list:
         elif not val > bound:
             failures.append(
                 f"{section}.{key} = {val}: must be > {bound} ({why})")
+
+    # the compile gates: absolute and runner-speed-independent.  A null
+    # compile count means the runtime didn't expose the jit cache counter
+    # (private JAX API) — the bench emits None and the gate SKIPS rather
+    # than failing a dependency upgrade; the latency gates above still
+    # cover the recompile symptom.
+    dh = fresh.get("decode_heavy", {})
+    compiles = dh.get("coarse", {}).get("compiles")
+    savings = dh.get("compile_savings")
+    if "decode_heavy" not in fresh:
+        failures.append("decode_heavy: section missing from fresh results")
+    elif compiles is None or savings is None:
+        print("compile counters unavailable in fresh results; "
+              "compile gates skipped")
+    else:
+        if savings <= 0:
+            failures.append(
+                f"decode_heavy.compile_savings = {savings}: must be > 0 "
+                f"(coarse buckets must save recompiles vs the pow2 ladder)")
+        if compiles > MAX_COARSE_COMPILES:
+            failures.append(
+                f"decode_heavy.coarse.compiles = {compiles}: exceeds the "
+                f"{MAX_COARSE_COMPILES}-shape budget (per-shape recompiles "
+                f"are back in the serve loop — check the bucket policy)")
+        else:
+            print(f"coarse bucket compiles: {compiles} "
+                  f"(budget {MAX_COARSE_COMPILES}), "
+                  f"savings vs pow2: {savings}")
     return failures
 
 

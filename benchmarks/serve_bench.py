@@ -31,7 +31,18 @@ Modes:
 
   PYTHONPATH=src python benchmarks/serve_bench.py --prefix-heavy
 
-* ``--smoke`` — a seconds-scale tiny-config pass over BOTH scenarios for
+* ``run_decode_heavy()`` / ``--decode-heavy`` — the bucket-policy
+  scenario: a few LONG-generation requests pin the batch's table width
+  over many short ones (heavily skewed context lengths).  Compares the
+  legacy ``pow2`` current-width buckets (growing contexts recompile at
+  every doubling, mid-decode) against the coarse ``maxlen`` policy (one
+  final-width bucket per request lifetime; affordable because the
+  length-bounded kernel skips dead padded slots).  Reports TPOT p50/p95
+  plus per-shape compile counts.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --decode-heavy
+
+* ``--smoke`` — a seconds-scale tiny-config pass over ALL scenarios for
   CI, emitting the TTFT/TPOT JSON schema (``--json PATH``) the bench
   trajectory and the perf-regression gate consume.  The bench validates
   its own output (schema + required keys) and exits nonzero on a
@@ -290,6 +301,111 @@ def run_prefix_heavy(chunk_size: int = 16, shared_len: int = 64,
     return out
 
 
+# ------------------------------------------------------ decode-heavy TPOT
+def run_decode_heavy(chunk_size: int = 8, short_len: int = 4,
+                     long_len: int = 4, n_short: int = 10, n_long: int = 2,
+                     short_new: int = 8, long_new: int = 190,
+                     block_size: int = 2, scheme: str = "WFE",
+                     build=_build_base) -> dict:
+    """Bucket-policy comparison on a decode-heavy skewed-length workload.
+
+    A few requests generate LONG tails while many short ones continuously
+    cycle through the batch — the mixed-length steady state of a serving
+    fleet.  The long requests pin the batch's table width; under the
+    legacy ``pow2`` policy their growing contexts re-cross a bucket
+    boundary at every doubling, paying a recompile MID-DECODE each time —
+    and every such gap lands in the TPOT of whichever short requests are
+    in flight at that moment.  The ``maxlen`` policy pads to the batch's
+    final width up front (known at admission), so a request compiles its
+    bucket once at entry and never again — affordable because the
+    length-bounded kernel skips the dead padded slots (no DMA, no FLOPs;
+    see docs/benchmarks.md "dead DMA").
+
+    Each engine warms up on SHORT traffic only (the steady state a long
+    request arrives into), with the shared jit caches cleared per mode so
+    compile counts measure the policy, not the run order.  Reports
+    TTFT/TPOT p50/p95, dispatches, and the per-shape compile count; the
+    headlines are ``tpot_speedup`` (pow2 p50 / maxlen p50) and
+    ``compile_savings`` (pow2 compiles - maxlen compiles).
+    """
+    cfg, params = build()
+    # TPOT needs >= 2 generated tokens per request (it is the mean
+    # INTER-token gap) — below that the scenario has no headline
+    short_new, long_new = max(2, short_new), max(2, long_new)
+    short_total = short_len + short_new
+    long_total = long_len + long_new
+    n_blocks = (n_long * (-(-long_total // block_size))
+                + n_short * (-(-short_total // block_size)) + 8)
+    out: dict = {"short_len": short_len, "long_len": long_len,
+                 "short_new": short_new, "long_new": long_new,
+                 "n_short": n_short, "n_long": n_long,
+                 "chunk_size": chunk_size, "scheme": scheme}
+    print(f"\n### Decode-heavy serving: {n_short} short (+{short_new} tok) "
+          f"vs {n_long} long (+{long_new} tok) requests, bs={block_size} "
+          f"({scheme})")
+    print(f"{'policy':>8s} {'ttft p50 ms':>12s} {'tpot p50 ms':>12s} "
+          f"{'tpot p95 ms':>12s} {'dispatches':>11s} {'compiles':>9s}")
+
+    def prompts():
+        # longs first: they admit immediately and stay in the batch for
+        # the whole run, so every pow2 width crossing has shorts in flight
+        longs = [([2 + (i * 7 + j) % 23 for j in range(long_len)],
+                  long_new) for i in range(n_long)]
+        shorts = [([1 + (i * 5 + j) % 29 for j in range(short_len)],
+                   short_new) for i in range(n_short)]
+        return longs + shorts
+
+    for label, policy in (("pow2", "pow2"), ("coarse", "maxlen")):
+        engine = ServeEngine(cfg, params, n_blocks=n_blocks,
+                             block_size=block_size, max_batch=4,
+                             scheme=scheme, chunk_size=chunk_size,
+                             bucket_policy=policy,
+                             era_freq=8, cleanup_freq=8)
+        tid = engine.pool.register_thread()
+        # the jitted steps are lru-shared across engines over one config:
+        # clear so compile counts measure the POLICY, not the run order
+        engine.clear_compile_caches()
+        # warmup: SHORT traffic only — the long requests' width buckets
+        # arrive cold in the timed pass, exactly as in live serving
+        for p, nt in prompts()[n_long:n_long + 2]:
+            engine.submit(p, nt)
+        engine.run(tid)
+        before = dict(engine.sched.stats)  # counters are cumulative
+        compiles0 = engine.compile_cache_size()
+        reqs = [engine.submit(p, nt) for p, nt in prompts()]
+        t0 = time.perf_counter()
+        engine.run(tid)
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        after = engine.sched.stats
+        row = latency_summary(reqs)
+        row["tok_s"] = sum(nt for _, nt in prompts()) / dt
+        row["dispatches"] = after["steps"] - before["steps"]
+        compiles1 = engine.compile_cache_size()
+        row["compiles"] = (None if compiles0 is None or compiles1 is None
+                           else compiles1 - compiles0)
+        out[label] = row
+        compiles = "n/a" if row["compiles"] is None else row["compiles"]
+        print(f"{label:>8s} {row['ttft']['p50_ms']:>12.1f} "
+              f"{row['tpot']['p50_ms']:>12.1f} "
+              f"{row['tpot']['p95_ms']:>12.1f} {row['dispatches']:>11d} "
+              f"{compiles:>9}")
+    base, coarse = out["pow2"], out["coarse"]
+    out["tpot_speedup"] = base["tpot"]["p50_ms"] / coarse["tpot"]["p50_ms"]
+    out["compile_savings"] = (
+        None if base["compiles"] is None or coarse["compiles"] is None
+        else base["compiles"] - coarse["compiles"])
+    savings_ok = out["compile_savings"] is None or out["compile_savings"] > 0
+    ok = out["tpot_speedup"] > 1.0 and savings_ok
+    saved = ("n/a (no cache counter)" if out["compile_savings"] is None
+             else out["compile_savings"])
+    print(f"TPOT speedup (p50): {out['tpot_speedup']:.2f}x, "
+          f"{saved} recompiles saved  "
+          f"[{'PASS' if ok else 'FAIL'}: coarse buckets must cut "
+          f"mid-decode recompiles]")
+    return out
+
+
 def run_smoke(chunk_size: int = 8) -> dict:
     """Seconds-scale CI smoke: tiny config, short prompts, same schema."""
     return {
@@ -301,6 +417,9 @@ def run_smoke(chunk_size: int = 8) -> dict:
         "prefix_heavy": run_prefix_heavy(
             chunk_size=chunk_size, shared_len=16, tail_len=8,
             n_requests=4, new_tokens=3, block_size=4),
+        "decode_heavy": run_decode_heavy(
+            chunk_size=chunk_size, n_short=6, n_long=2,
+            short_new=8, long_new=190, block_size=2),
     }
 
 
@@ -308,7 +427,13 @@ def run_smoke(chunk_size: int = 8) -> dict:
 #: bench validates its OWN output and exits nonzero on a mismatch, so the
 #: CI gate never green-lights a silently malformed JSON
 _TTFT_SCHEMA_MODES = {"prefill_heavy": ("token_at_a_time", "chunked"),
-                      "prefix_heavy": ("uncached", "cached")}
+                      "prefix_heavy": ("uncached", "cached"),
+                      "decode_heavy": ("pow2", "coarse")}
+
+#: per-section headline metric the validator requires to be numeric
+_HEADLINES = {"prefill_heavy": "ttft_speedup",
+              "prefix_heavy": "hit_rate",
+              "decode_heavy": "tpot_speedup"}
 
 
 def validate_results(results: dict) -> list:
@@ -318,7 +443,8 @@ def validate_results(results: dict) -> list:
         errors.append(f"bad schema: {results.get('schema')!r}")
     present = [s for s in _TTFT_SCHEMA_MODES if s in results]
     if not present:
-        errors.append("no scenario section (prefill_heavy/prefix_heavy)")
+        errors.append("no scenario section "
+                      f"({'/'.join(_TTFT_SCHEMA_MODES)})")
     for section in present:
         sec = results[section]
         for mode in _TTFT_SCHEMA_MODES[section]:
@@ -335,8 +461,7 @@ def validate_results(results: dict) -> list:
                     errors.append(f"{section}.{mode}.ttft: p50_ms is None")
             if "dispatches" not in sec[mode]:
                 errors.append(f"{section}.{mode}: missing dispatches")
-        headline = ("ttft_speedup" if section == "prefill_heavy"
-                    else "hit_rate")
+        headline = _HEADLINES[section]
         if not isinstance(sec.get(headline), (int, float)):
             errors.append(f"{section}: missing {headline}")
     return errors
@@ -461,6 +586,14 @@ def main(argv=None) -> int:
                     help="run the prefix-caching scenario (shared system "
                          "prompt, divergent tails): hit-rate + TTFT "
                          "with/without caching")
+    ap.add_argument("--decode-heavy", action="store_true",
+                    help="run the bucket-policy scenario (a few long-"
+                         "generation requests pin the table width over "
+                         "many short ones): TPOT + per-shape compile "
+                         "counts for pow2 vs coarse (maxlen) buckets")
+    ap.add_argument("--long-new", type=int, default=190,
+                    help="tokens generated by each long request in "
+                         "--decode-heavy (the skew driver)")
     ap.add_argument("--shared-len", type=int, default=64,
                     help="shared system-prompt length for --prefix-heavy")
     ap.add_argument("--tail-len", type=int, default=16,
@@ -478,9 +611,12 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.smoke:
         results = run_smoke(chunk_size=min(args.chunk_size, 8))
+        savings = results["decode_heavy"]["compile_savings"]
         ok = (results["prefill_heavy"]["ttft_speedup"] > 1.0
               and results["prefix_heavy"]["hit_rate"] > 0
-              and results["prefix_heavy"]["chunks_saved"] > 0)
+              and results["prefix_heavy"]["chunks_saved"] > 0
+              and results["decode_heavy"]["tpot_speedup"] > 1.0
+              and (savings is None or savings > 0))
     elif args.prefill_heavy:
         results = {"schema": "serve_bench/ttft_tpot/v1"}
         results["prefill_heavy"] = run_prefill_heavy(
@@ -496,6 +632,14 @@ def main(argv=None) -> int:
             new_tokens=args.new_tokens or 4)
         ok = (results["prefix_heavy"]["hit_rate"] > 0
               and results["prefix_heavy"]["chunks_saved"] > 0)
+    elif args.decode_heavy:
+        results = {"schema": "serve_bench/ttft_tpot/v1"}
+        results["decode_heavy"] = run_decode_heavy(
+            chunk_size=args.chunk_size, long_new=args.long_new,
+            short_new=args.new_tokens or 8)
+        savings = results["decode_heavy"]["compile_savings"]
+        ok = (results["decode_heavy"]["tpot_speedup"] > 1.0
+              and (savings is None or savings > 0))
     else:
         if args.latency:
             run()

@@ -47,33 +47,49 @@ def can_delete_blocks_interval(alloc_eras, retire_eras, res_lo, res_hi, *,
         interpret=interpret)
 
 
-def paged_decode_attention(q, k_pool, v_pool, tables, lengths, *,
+def paged_decode_attention(q, k_pool, v_pool, tables, lengths,
+                           num_live_blocks=None, *,
                            scale: Optional[float] = None,
                            use_kernel: bool = False,
-                           interpret: bool = True) -> jax.Array:
-    """Decode attention over the paged pool.  q (B,KH,G,D) -> (B,KH,G,D)."""
+                           interpret: bool | None = None) -> jax.Array:
+    """Decode attention over the paged pool.  q (B,KH,G,D) -> (B,KH,G,D).
+
+    ``num_live_blocks`` (B,) i32 bounds each request's table walk (dead
+    slots cost neither DMA nor FLOPs in the kernel path; the ref masks
+    them).  ``interpret=None`` auto-selects like ``era_scan``: compiled
+    Mosaic on TPU backends, the interpreter elsewhere.
+    """
     tables = jnp.asarray(tables, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
+    if num_live_blocks is not None:
+        num_live_blocks = jnp.asarray(num_live_blocks, jnp.int32)
     if use_kernel:
         return paged_attention(q, k_pool, v_pool, tables, lengths,
-                               scale=scale, interpret=interpret)
+                               num_live_blocks, scale=scale,
+                               interpret=interpret)
     return ref.paged_attention_ref(q, k_pool, v_pool, tables, lengths,
-                                   scale=scale)
+                                   num_live_blocks, scale=scale)
 
 
-def paged_chunk_attention(q, k_pool, v_pool, tables, q_positions, *,
+def paged_chunk_attention(q, k_pool, v_pool, tables, q_positions,
+                          num_live_blocks=None, *,
                           scale: Optional[float] = None,
                           use_kernel: bool = False,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: bool | None = None) -> jax.Array:
     """Chunked-prefill attention over the paged pool.
 
     q (B,C,KH,G,D) -> (B,C,KH,G,D); each query at absolute position p sees
     pool tokens at positions <= p (prior context + intra-chunk causal).
+    ``num_live_blocks`` / ``interpret`` as in ``paged_decode_attention``.
     """
     tables = jnp.asarray(tables, jnp.int32)
     q_positions = jnp.asarray(q_positions, jnp.int32)
+    if num_live_blocks is not None:
+        num_live_blocks = jnp.asarray(num_live_blocks, jnp.int32)
     if use_kernel:
         return paged_attention_chunk(q, k_pool, v_pool, tables, q_positions,
-                                     scale=scale, interpret=interpret)
+                                     num_live_blocks, scale=scale,
+                                     interpret=interpret)
     return ref.paged_attention_chunk_ref(q, k_pool, v_pool, tables,
-                                         q_positions, scale=scale)
+                                         q_positions, num_live_blocks,
+                                         scale=scale)

@@ -21,8 +21,14 @@ prefill); single-token decode is the C == 1 specialization:
   every pool token at positions <= p — the table's prior context AND the
   chunk's own earlier tokens (which the caller scattered into the pool
   before attention), so one mask covers history + intra-chunk causality;
-* padded table slots are fetched but masked; a production refinement
-  bounds the grid per-request via the prefetched positions.
+* the grid is LENGTH-BOUNDED per request: a scalar-prefetched
+  ``num_live_blocks`` vector rides next to the tables, the K/V index_maps
+  clamp dead slots ``j >= num_live_blocks[b]`` to the request's last live
+  block (a repeated block index, so the pipeline elides the HBM copy),
+  and the kernel body skips the score/accumulate math for them — padded
+  table slots cost neither DMA nor FLOPs.  Finalization happens on the
+  last grid step regardless, reading the accumulator state a short row
+  stopped updating at its own boundary.
 """
 
 from __future__ import annotations
@@ -35,11 +41,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .era_scan import _resolve_interpret
+
 NEG_INF = -1e30
 
 
-def _paged_chunk_kernel(tables, q_ref, qpos_ref, k_ref, v_ref, out_ref,
+def _paged_chunk_kernel(tables, live, q_ref, qpos_ref, k_ref, v_ref, out_ref,
                         m_s, l_s, acc_s, *, bs: int, scale: float):
+    bi = pl.program_id(0)
     j = pl.program_id(2)
     nblk = pl.num_programs(2)
 
@@ -49,26 +58,38 @@ def _paged_chunk_kernel(tables, q_ref, qpos_ref, k_ref, v_ref, out_ref,
         l_s[:] = jnp.zeros_like(l_s)
         acc_s[:] = jnp.zeros_like(acc_s)
 
-    q = q_ref[0, :, 0].astype(jnp.float32)     # (C, G, D)
-    qp = qpos_ref[0]                           # (C,) absolute positions
-    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bs, D)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)
-    # (C, G, bs) scores for this pool block
-    s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    kvpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
-    valid = kvpos <= qp[:, None, None]         # (C, 1, bs): causal-by-position
-    s = jnp.where(valid, s, NEG_INF)
+    # dead iterations (j beyond this request's live blocks) update nothing:
+    # their K/V tile was never fetched (the index_map clamps to the last
+    # live block, and a repeated index elides the copy), and with every
+    # position causally masked the flash update would be an exact no-op
+    # (p = 0, corr = exp(0) = 1) — skipping it is bitwise equivalent
+    @pl.when(j < live[bi])
+    def _update():
+        q = q_ref[0, :, 0].astype(jnp.float32)     # (C, G, D)
+        qp = qpos_ref[0]                           # (C,) absolute positions
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        # (C, G, bs) scores for this pool block
+        s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kvpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+        valid = kvpos <= qp[:, None, None]         # (C, 1, bs): causal
+        s = jnp.where(valid, s, NEG_INF)
 
-    m_prev = m_s[:, :, :1]                     # (C, G, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
-    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # (C, G, bs)
-    corr = jnp.exp(m_prev - m_new)
-    l_s[:, :, :1] = l_s[:, :, :1] * corr + jnp.sum(p, axis=2, keepdims=True)
-    acc_s[:] = acc_s[:] * corr + jax.lax.dot_general(
-        p, v, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_s[:, :, :1] = m_new
+        m_prev = m_s[:, :, :1]                     # (C, G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # (C, G, bs)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[:, :, :1] = (l_s[:, :, :1] * corr
+                         + jnp.sum(p, axis=2, keepdims=True))
+        acc_s[:] = acc_s[:] * corr + jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[:, :, :1] = m_new
 
+    # finalize on the LAST grid step (which may be dead for this request):
+    # the accumulators hold their values from iteration live[bi]-1, and the
+    # max(l, eps) guard keeps an all-masked row at a defined 0 output
     @pl.when(j == nblk - 1)
     def _finalize():
         out_ref[0, :, 0] = (acc_s[:] / jnp.maximum(l_s[:, :, :1], 1e-30)
@@ -77,35 +98,51 @@ def _paged_chunk_kernel(tables, q_ref, qpos_ref, k_ref, v_ref, out_ref,
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_attention_chunk(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
-                          tables: jax.Array, q_positions: jax.Array, *,
+                          tables: jax.Array, q_positions: jax.Array,
+                          num_live_blocks: jax.Array | None = None, *,
                           scale: float | None = None,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: bool | None = None) -> jax.Array:
     """q (B,C,KH,G,D); pools (N,bs,KH,D); tables (B,nblk) i32;
     q_positions (B,C) i32 absolute positions.  Returns (B,C,KH,G,D).
 
     Each query row attends to every pool token the table names at an
     absolute position <= its own (prior context + intra-chunk causal).
+
+    ``num_live_blocks`` (B,) i32 bounds the per-request grid: table slots
+    ``j >= num_live_blocks[b]`` are neither fetched nor computed.  Values
+    must be >= 1 and cover every causally visible position (the default —
+    derived from the highest query position — is the exact bound).
+    ``interpret=None`` auto-selects compiled Mosaic on TPU backends and
+    the interpreter elsewhere (CPU CI), like ``era_scan``.
     """
     b, c, kh, g, d = q.shape
     n, bs, _, _ = k_pool.shape
     nblk = tables.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if num_live_blocks is None:
+        # exact bound: the last block holding any causally visible position
+        num_live_blocks = jnp.max(q_positions, axis=1) // bs + 1
+    num_live_blocks = jnp.minimum(
+        jnp.asarray(num_live_blocks, jnp.int32), nblk)
 
     kernel = functools.partial(_paged_chunk_kernel, bs=bs, scale=scale)
+    # dead-slot clamp: j >= live[b] repeats the LAST live block's index, so
+    # the pipeline sees an unchanged (non-decreasing run of equal) index
+    # and skips the HBM->VMEM copy for every dead iteration
+    kv_index = lambda bi, h, j, tbl, live: (
+        tbl[bi, jnp.minimum(j, jnp.maximum(live[bi] - 1, 0))], 0, h, 0)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(b, kh, nblk),
         in_specs=[
             pl.BlockSpec((1, c, 1, g, d),
-                         lambda bi, h, j, tbl: (bi, 0, h, 0, 0)),
-            pl.BlockSpec((1, c), lambda bi, h, j, tbl: (bi, 0)),
-            pl.BlockSpec((1, bs, 1, d),
-                         lambda bi, h, j, tbl: (tbl[bi, j], 0, h, 0)),
-            pl.BlockSpec((1, bs, 1, d),
-                         lambda bi, h, j, tbl: (tbl[bi, j], 0, h, 0)),
+                         lambda bi, h, j, tbl, live: (bi, 0, h, 0, 0)),
+            pl.BlockSpec((1, c), lambda bi, h, j, tbl, live: (bi, 0)),
+            pl.BlockSpec((1, bs, 1, d), kv_index),
+            pl.BlockSpec((1, bs, 1, d), kv_index),
         ],
         out_specs=pl.BlockSpec((1, c, 1, g, d),
-                               lambda bi, h, j, tbl: (bi, 0, h, 0, 0)),
+                               lambda bi, h, j, tbl, live: (bi, 0, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((c, g, 128), jnp.float32),  # m (col 0; lane-padded)
             pltpu.VMEM((c, g, 128), jnp.float32),  # l
@@ -116,24 +153,27 @@ def paged_attention_chunk(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, c, kh, g, d), q.dtype),
-        interpret=interpret,
-    )(tables, q, q_positions, k_pool, v_pool)
+        interpret=_resolve_interpret(interpret),
+    )(tables, num_live_blocks, q, q_positions, k_pool, v_pool)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
-                    tables: jax.Array, lengths: jax.Array, *,
+                    tables: jax.Array, lengths: jax.Array,
+                    num_live_blocks: jax.Array | None = None, *,
                     scale: float | None = None,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """Single-token decode attention: the C == 1 chunk specialization.
 
     q (B,KH,G,D); pools (N,bs,KH,D); tables (B,nblk) i32; lengths (B,) i32
     (context length INCLUDING the query token).  Returns (B, KH, G, D).
+    ``num_live_blocks`` defaults to the exact per-request bound
+    ``ceil(lengths / bs)`` — see ``paged_attention_chunk``.
     """
     # a decode token at position lengths-1 sees kv positions < lengths —
     # exactly the chunk kernel's causal-by-position mask with C == 1
     q_positions = (lengths - 1).astype(jnp.int32)[:, None]  # (B, 1)
     out = paged_attention_chunk(q[:, None], k_pool, v_pool, tables,
-                                q_positions, scale=scale,
+                                q_positions, num_live_blocks, scale=scale,
                                 interpret=interpret)
     return out[:, 0]

@@ -49,6 +49,7 @@ def paged_attention_chunk_ref(
     v_pool: jax.Array,       # (N, bs, KH, D) paged value pool
     tables: jax.Array,       # (B, nblk) int32 block ids (padding: any valid id)
     q_positions: jax.Array,  # (B, C) int32 absolute positions of the queries
+    num_live_blocks: Optional[jax.Array] = None,  # (B,) i32 live table slots
     *,
     scale: Optional[float] = None,
 ) -> jax.Array:
@@ -57,6 +58,11 @@ def paged_attention_chunk_ref(
     positions <= p — the table's prior context plus the chunk's own earlier
     tokens (scattered into the pool by the caller before attention).
     Returns (B, C, KH, G, D).
+
+    ``num_live_blocks`` mirrors the kernel's length-bounded grid: table
+    slots ``j >= num_live_blocks[b]`` are masked out of the softmax (None =
+    all slots visible; positions beyond the causal mask are dead either
+    way, so an exact bound changes nothing bitwise).
     """
     b, c, kh, g, d = q.shape
     n, bs, _, _ = k_pool.shape
@@ -69,6 +75,9 @@ def paged_attention_chunk_ref(
                    preferred_element_type=jnp.float32) * scale
     kvpos = jnp.arange(nblk * bs)  # logical positions within the table
     mask = kvpos[None, None, :] <= q_positions[:, :, None]  # (B, C, S)
+    if num_live_blocks is not None:
+        live = jnp.asarray(num_live_blocks, jnp.int32)
+        mask = mask & (kvpos[None, None, :] < (live * bs)[:, None, None])
     s = jnp.where(mask[:, None, None, :, :], s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgcs,bskd->bckgd", w.astype(jnp.float32),
@@ -83,10 +92,16 @@ def paged_attention_ref(
     v_pool: jax.Array,     # (N, bs, KH, D) paged value pool
     tables: jax.Array,     # (B, nblk) int32 block ids (padding: any valid id)
     lengths: jax.Array,    # (B,) int32 tokens in cache (context length)
+    num_live_blocks: Optional[jax.Array] = None,  # (B,) i32 live table slots
     *,
     scale: Optional[float] = None,
 ) -> jax.Array:
-    """Decode attention through block tables.  Returns (B, KH, G, D)."""
+    """Decode attention through block tables.  Returns (B, KH, G, D).
+
+    ``num_live_blocks`` mirrors the kernel's length-bounded grid (see
+    ``paged_attention_chunk_ref``); the exact bound ``ceil(lengths / bs)``
+    is already implied by the length mask.
+    """
     b, kh, g, d = q.shape
     n, bs, _, _ = k_pool.shape
     nblk = tables.shape[1]
@@ -99,7 +114,11 @@ def paged_attention_ref(
     s = jnp.einsum("bkgd,bskd->bkgs", q, k,
                    preferred_element_type=jnp.float32) * scale
     pos = jnp.arange(nblk * bs)[None, :]  # logical positions
-    s = jnp.where((pos < lengths[:, None])[:, None, None, :], s, -1e30)
+    valid = pos < lengths[:, None]  # (B, S)
+    if num_live_blocks is not None:
+        live = jnp.asarray(num_live_blocks, jnp.int32)
+        valid = valid & (pos < (live * bs)[:, None])
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w.astype(jnp.float32),
                      v.astype(jnp.float32))

@@ -52,6 +52,13 @@ def main(argv=None) -> int:
                     help="prefill chunk token budget: a P-token prompt "
                          "materializes in ceil(P/C) device steps (1 = "
                          "token-at-a-time)")
+    ap.add_argument("--bucket-policy", default="maxlen",
+                    choices=("maxlen", "pow2"),
+                    help="table-width shape buckets: 'maxlen' pads to the "
+                         "batch's final width (known at admission; one "
+                         "compile per request lifetime, dead slots skipped "
+                         "by the length-bounded kernel), 'pow2' is the "
+                         "legacy current-width ladder")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable the refcounted prefix cache (prompts "
                          "sharing a block-aligned prefix alias the same "
@@ -76,6 +83,7 @@ def main(argv=None) -> int:
                          max_threads=max(8, args.workers + 1),
                          max_inflight=max(4, args.workers),
                          chunk_size=args.chunk_size,
+                         bucket_policy=args.bucket_policy,
                          prefix_caching=not args.no_prefix_cache,
                          **smr_kwargs)
     reqs = []

@@ -16,6 +16,16 @@ table-width buckets, and both plan kinds share the per-shard device locks
 — multi-worker pipelining overlaps a prefill chunk on one shard with
 decode batches on others.
 
+Shape buckets (``bucket_policy``): every step pads its block table to a
+width bucket so XLA compiles once per bucket.  The default ``"maxlen"``
+buckets on the batch's FINAL width (known at admission from prompt +
+max_new_tokens): a request stays in one bucket for its whole lifetime, so
+growing contexts never recompile mid-decode.  Padding is cheap because
+the paged kernels are LENGTH-BOUNDED: a per-request ``num_live_blocks``
+vector (derived in ``paged_model`` from lengths/positions) stops the
+kernel's table walk at the last live slot — dead slots cost neither DMA
+nor FLOPs.  ``"pow2"`` keeps the legacy current-width ladder.
+
 Prefix caching (``prefix_caching=True``, the default): prompts sharing a
 block-aligned token prefix alias the same pool pages via the refcounted
 ``PrefixCache`` — the prefill cursor starts at the cached boundary, so
@@ -24,10 +34,12 @@ a cached page.  ``drain`` clears the cache first (cache references must
 not pin slots past shutdown), restoring the every-block-freed invariant.
 
 Greedy sampling; each plan kind dispatches through one jitted function.
-``use_kernel=True`` accelerates BOTH compute paths: paged decode attention
-takes the Pallas kernel AND reclamation takes the Pallas ``era_scan``
-backend of ``cleanup_batch`` (``cleanup_backend="pallas"``); otherwise the
-NumPy backend vectorizes the scan.
+``use_kernel=True`` accelerates BOTH compute paths: paged attention takes
+the Pallas kernel AND reclamation takes the Pallas ``era_scan`` backend
+of ``cleanup_batch`` (``cleanup_backend="pallas"``); otherwise the NumPy
+backend vectorizes the scan.  The paged kernels share ``era_scan``'s
+``interpret=None`` auto path: compiled Mosaic on real TPU backends, the
+interpreter on CPU hosts (CI) — nothing hardcodes ``interpret=True``.
 
 Concurrency: ``step()`` is safe to call from many worker threads (the
 ``ServeRuntime`` in ``runtime.py`` does exactly that).  Scheduling and
@@ -124,6 +136,7 @@ class ServeEngine:
                  max_threads: int = 8, n_shards: int = 1,
                  max_inflight: int = 4, merge_freq: int = 1,
                  pad_shapes: bool = True, chunk_size: int = 16,
+                 bucket_policy: str = "maxlen",
                  prefix_caching: bool = True,
                  prefix_cache_entries: Optional[int] = None,
                  **smr_kwargs):
@@ -131,10 +144,29 @@ class ServeEngine:
         self.params = params
         self.block_size = block_size
         self.use_kernel = use_kernel
-        # shape bucketing: pad every step to (max_batch, pow2 table width)
-        # so XLA compiles once per bucket instead of once per (B, nblk) —
-        # without it the serve loop is recompile-bound (hundreds of ms per
-        # shape) and multi-worker pipelining has nothing to overlap
+        # shape bucketing: pad every step to (max_batch, bucketed table
+        # width) so XLA compiles once per bucket instead of once per
+        # (B, nblk) — without it the serve loop is recompile-bound
+        # (hundreds of ms per shape) and multi-worker pipelining has
+        # nothing to overlap.  Width policy (the padded slots are ~free:
+        # the length-bounded kernel skips their DMA and FLOPs):
+        #   "maxlen" (default) — pow2 of the batch's FINAL table width,
+        #     known at admission (prompt + max_new_tokens), ratcheted by a
+        #     per-shard high-water mark so the width never NARROWS either
+        #     (a wide request completing must not push the surviving
+        #     narrow batch into a never-compiled smaller shape): a shape
+        #     compiles only when a wider-than-ever request class arrives;
+        #   "pow2" — the legacy ladder over the CURRENT width: tight
+        #     padding, but every growth past a pow2 boundary recompiles.
+        if bucket_policy not in ("maxlen", "pow2"):
+            raise ValueError(f"bucket_policy {bucket_policy!r}: "
+                             "expected 'maxlen' or 'pow2'")
+        self.bucket_policy = bucket_policy
+        # per-shard width high-water marks (see "maxlen" above).  Updated
+        # outside the device locks: a racing lost update merely lets a
+        # narrower shape through once (one extra cached compile), never
+        # an incorrect table.
+        self._width_hwm = [0] * max(1, n_shards)
         self.pad_shapes = pad_shapes
         self.max_batch = max_batch
         pool_kwargs = dict(scheme=scheme, max_threads=max_threads,
@@ -186,6 +218,34 @@ class ServeEngine:
         self._decode = _jit_decode(cfg, use_kernel)
         self._prefill = _jit_prefill(cfg, use_kernel)
 
+    # ------------------------------------------- compile-cache introspection
+    # the jitted steps are lru-shared across engines over one config, and
+    # their cache counters are private JAX API — keep the probing HERE so
+    # the compile-count perf gate (benchmarks/serve_bench.py) and the
+    # bucket-policy tests degrade together when the API moves
+    def compile_cache_size(self):
+        """Total compiled shape variants of the decode+prefill steps, or
+        None when the runtime doesn't expose the counter."""
+        total = 0
+        for fn in (self._decode, self._prefill):
+            try:
+                total += int(fn._cache_size())
+            except AttributeError:
+                return None
+        return total
+
+    def clear_compile_caches(self) -> bool:
+        """Drop the compiled decode/prefill variants (False if the runtime
+        doesn't support it).  NOTE: shared across engines over one config."""
+        ok = True
+        for fn in (self._decode, self._prefill):
+            clear = getattr(fn, "clear_cache", None)
+            if clear is None:
+                ok = False
+            else:
+                clear()
+        return ok
+
     # legacy single-shard view of the device pools (tests/benchmarks drive
     # engine._step with engine.pools directly)
     @property
@@ -224,21 +284,45 @@ class ServeEngine:
         self.sched.complete(plan, sampled, tid)
         return sampled
 
+    def _bucket_width(self, plan, nblk: int, shard: int) -> int:
+        """Padded table width for a plan (see ``bucket_policy`` above)."""
+        if self.bucket_policy != "maxlen":
+            return 1 << max(0, nblk - 1).bit_length()
+        # the batch's maximal FINAL table width is known at admission:
+        # every request tops out at ceil((prompt + max_new) / bs) pages
+        # (eviction rewinds the cursor, never the cap); the pow2 quantizer
+        # bounds the shape count across heterogeneous workloads
+        final = max(-(-(len(r.prompt) + r.max_new_tokens)
+                      // self.block_size) for r in plan.requests)
+        nblk = max(nblk, min(final, self._shard_sizes[shard]))
+        w = 1 << max(0, nblk - 1).bit_length()
+        if plan.kind == "decode":
+            # ratchet DECODE widths: batch membership changes (a wide
+            # request completing) must never shrink the width into a
+            # never-compiled shape mid-decode — padding wider is ~free
+            # (the bounded kernel skips dead slots), recompiling is not.
+            # Prefill needs no ratchet: B == 1, so its width is the one
+            # request's own final — stable across all its chunks.
+            w = max(w, self._width_hwm[shard])
+            self._width_hwm[shard] = w
+        return w
+
     def _bucket_tables(self, plan, rows: int):
-        """Shard-localize + (optionally) pad a plan's table to its pow2
-        width bucket.  Returns (tables (rows, W) i32, pad_slot)."""
+        """Shard-localize + (optionally) pad a plan's table to its width
+        bucket.  Returns (tables (rows, W) i32, pad_slot)."""
         s = plan.shard
         base = self._shard_bases[s]
         pad_slot = self._shard_sizes[s]  # shard-local scratch slot id
         # shard-local slot ids: the plan's tables name global slots; this
         # shard's device pool indexes [0, size + pad).  Column padding (0
-        # fill) clamps to local 0 — never written, reads masked by length
-        # (decode) / causal position (prefill).
+        # fill) clamps to local 0 — never fetched: the per-request
+        # num_live_blocks bound stops the kernel's table walk at the last
+        # live slot (the ref path masks them by length/causal position).
         local = np.maximum(plan.tables.astype(np.int32) - base, 0)
         if not self.pad_shapes:
             return local, pad_slot
         b, nblk = local.shape
-        w = 1 << max(0, nblk - 1).bit_length()
+        w = self._bucket_width(plan, nblk, s)
         tables = np.full((rows, w), pad_slot, np.int32)
         tables[:b, :] = 0
         tables[:b, :nblk] = local
@@ -269,8 +353,9 @@ class ServeEngine:
 
     def _dispatch_prefill(self, plan) -> np.ndarray:
         """One prefill chunk (B == 1): pad the chunk length to its pow2
-        bucket next to the existing table-width buckets, so XLA compiles
-        once per (chunk bucket, width bucket) instead of per chunk shape."""
+        bucket next to the table-width buckets (``bucket_policy``), so XLA
+        compiles once per (chunk bucket, width bucket) instead of per
+        chunk shape."""
         s = plan.shard
         n = plan.n_tokens
         ctx = int(plan.lengths[0]) - n  # context BEFORE the chunk

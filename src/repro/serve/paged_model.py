@@ -65,6 +65,10 @@ def paged_decode_step(cfg, params, pools, tables, lengths, tokens, positions,
     # the pool block and in-block offset receiving this token's K/V
     blk_of_tok = tables[jnp.arange(b), positions // bs]  # (B,)
     off = positions % bs
+    # per-request LIVE table slots: the decode token's own block is the
+    # last one holding context, so slots beyond it are dead — the bounded
+    # kernel skips their DMA and FLOPs (padded table widths are ~free)
+    num_live = (positions // bs + 1).astype(jnp.int32)  # (B,)
 
     def layer_fn(x, xs):
         bp, k_pool, v_pool = xs  # (N, bs, KH, D) pools for this layer
@@ -73,9 +77,10 @@ def paged_decode_step(cfg, params, pools, tables, lengths, tokens, positions,
         # scatter the new K/V into the paged pool
         k_pool = k_pool.at[blk_of_tok, off].set(k1[:, 0])
         v_pool = v_pool.at[blk_of_tok, off].set(v1[:, 0])
-        qg = q.reshape(b, 1, kh, g, hd)[:, 0].transpose(0, 1, 2, 3)  # (B,KH,G,D)
+        # (B, 1, KH*G*D) projection -> grouped (B, KH, G, D) query layout
+        qg = q.reshape(b, kh, g, hd)
         out = paged_decode_attention(qg, k_pool, v_pool, tables, lengths,
-                                     scale=1.0 / math.sqrt(hd),
+                                     num_live, scale=1.0 / math.sqrt(hd),
                                      use_kernel=use_kernel)
         out = out.reshape(b, 1, h * hd).astype(x.dtype)
         x = x + matmul(out, bp["mix"]["wo"])
@@ -152,6 +157,12 @@ def paged_prefill_chunk(cfg, params, pools, tables, tokens, positions,
     col = jnp.minimum(positions // bs, nblk - 1)
     blk = jnp.where(valid, tables[jnp.arange(b)[:, None], col], _DROP_BLOCK)
     off = positions % bs
+    # per-request LIVE table slots: the chunk's last valid token sits in
+    # the deepest block any of its queries can see, so the bounded kernel
+    # walks exactly that many slots (padded rows clamp to the row's last
+    # valid position, so they derive the same bound)
+    last_pos = positions[jnp.arange(b), jnp.maximum(chunk_lens - 1, 0)]
+    num_live = (last_pos // bs + 1).astype(jnp.int32)  # (B,)
     x = embed_tokens(cfg, params["embed"], tokens)
 
     n_pat = len(cfg.block_pattern)
@@ -169,7 +180,7 @@ def paged_prefill_chunk(cfg, params, pools, tables, tokens, positions,
         v_pool = pools["v"][l].at[blk, off].set(v1, mode="drop")
         qg = q.reshape(b, c, kh, g, hd)
         out = paged_chunk_attention(qg, k_pool, v_pool, tables, positions,
-                                    scale=1.0 / math.sqrt(hd),
+                                    num_live, scale=1.0 / math.sqrt(hd),
                                     use_kernel=use_kernel)
         out = out.reshape(b, c, h * hd).astype(x.dtype)
         x = x + matmul(out, bp["mix"]["wo"])

@@ -229,6 +229,130 @@ def test_paged_chunk_attention_is_causal():
                                rtol=1e-5, atol=1e-5)
 
 
+# ================================================ length-bounded grid walks
+@pytest.mark.parametrize("b,c,kh,g,d,bs,nblk", [
+    (3, 4, 2, 2, 64, 8, 5),     # ragged contexts mid-prompt
+    (2, 1, 1, 4, 64, 16, 4),    # C == 1 (decode-as-chunk)
+    (1, 8, 2, 1, 128, 4, 7),    # chunk wider than a block
+])
+def test_bounded_grid_bitwise_equals_unbounded(b, c, kh, g, d, bs, nblk):
+    """The dead iterations the ``num_live_blocks`` bound skips were exact
+    no-ops of the flash update (every position causally masked: p = 0,
+    corr = exp(0) = 1), so bounding must be BITWISE equivalent — kernel vs
+    kernel, oracle vs oracle — whenever the bound covers the causal range.
+    """
+    ks = jax.random.split(jax.random.key(b * 77 + c + nblk), 5)
+    n = b * nblk + 2
+    q = jax.random.normal(ks[0], (b, c, kh, g, d), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (n, bs, kh, d), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (n, bs, kh, d), jnp.float32)
+    perm = jax.random.permutation(ks[3], n)[: b * nblk].reshape(b, nblk)
+    tables = perm.astype(jnp.int32)
+    # ragged per-request contexts: every row gets a different live depth
+    ctx = jax.random.randint(ks[4], (b, 1), 0, nblk * bs - c + 1, jnp.int32)
+    qpos = ctx + jnp.arange(c, dtype=jnp.int32)[None, :]
+    exact = jnp.max(qpos, axis=1) // bs + 1  # the derived exact bound
+    full = jnp.full((b,), nblk, jnp.int32)   # degenerate: walk everything
+
+    bounded = paged_attention_chunk(q, k_pool, v_pool, tables, qpos,
+                                    exact, interpret=True)
+    unbounded = paged_attention_chunk(q, k_pool, v_pool, tables, qpos,
+                                      full, interpret=True)
+    np.testing.assert_array_equal(np.asarray(bounded),
+                                  np.asarray(unbounded))
+    # the default (num_live_blocks=None) IS the exact bound
+    derived = paged_attention_chunk(q, k_pool, v_pool, tables, qpos,
+                                    interpret=True)
+    np.testing.assert_array_equal(np.asarray(bounded), np.asarray(derived))
+    # same bitwise claim for the jnp oracle...
+    r_bounded = ref.paged_attention_chunk_ref(q, k_pool, v_pool, tables,
+                                              qpos, exact)
+    r_unbounded = ref.paged_attention_chunk_ref(q, k_pool, v_pool, tables,
+                                                qpos)
+    np.testing.assert_array_equal(np.asarray(r_bounded),
+                                  np.asarray(r_unbounded))
+    # ...and the kernel still matches the oracle numerically
+    np.testing.assert_allclose(np.asarray(bounded), np.asarray(r_bounded),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_num_live_blocks_spans_one_to_nblk():
+    """Sweep the bound through every depth 1..nblk (incl. the all-padded
+    tail where only one block of a wide table is live): the kernel must
+    agree with the oracle under the SAME bound, even when the bound cuts
+    below the causal range (extra slots = garbage the request must never
+    read — the safety property of the clamped index_maps)."""
+    b, c, kh, g, d, bs, nblk = 2, 3, 2, 2, 64, 4, 6
+    ks = jax.random.split(jax.random.key(11), 4)
+    n = b * nblk + 1
+    q = jax.random.normal(ks[0], (b, c, kh, g, d), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (n, bs, kh, d), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (n, bs, kh, d), jnp.float32)
+    perm = jax.random.permutation(ks[3], n)[: b * nblk].reshape(b, nblk)
+    tables = perm.astype(jnp.int32)
+    # queries see the WHOLE table causally; only num_live bounds the walk
+    qpos = (nblk * bs - c + jnp.arange(c, dtype=jnp.int32))[None, :].repeat(
+        b, axis=0)
+    for live in range(1, nblk + 1):
+        nl = jnp.full((b,), live, jnp.int32)
+        got = paged_attention_chunk(q, k_pool, v_pool, tables, qpos, nl,
+                                    interpret=True)
+        want = ref.paged_attention_chunk_ref(q, k_pool, v_pool, tables,
+                                             qpos, nl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5, err_msg=f"{live=}")
+
+
+def test_bounded_walk_never_reads_dead_slots():
+    """Scribbling NaN over every pool block a request's bound excludes
+    must not change its output — the dead slots are truly never read
+    (the DMA-skip safety argument: clamped index_maps only ever name
+    live table slots)."""
+    b, c, kh, g, d, bs, nblk = 1, 2, 2, 2, 64, 4, 5
+    ks = jax.random.split(jax.random.key(29), 3)
+    n = nblk + 2
+    q = jax.random.normal(ks[0], (b, c, kh, g, d), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (n, bs, kh, d), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (n, bs, kh, d), jnp.float32)
+    tables = jnp.arange(nblk, dtype=jnp.int32)[None, :]
+    live = 2
+    qpos = (live * bs - c + jnp.arange(c, dtype=jnp.int32))[None, :]
+    nl = jnp.full((b,), live, jnp.int32)
+    out1 = paged_attention_chunk(q, k_pool, v_pool, tables, qpos, nl,
+                                 interpret=True)
+    dead = jnp.arange(n)[:, None, None, None] >= live  # blocks 2.. poisoned
+    k2 = jnp.where(dead, jnp.nan, k_pool)
+    v2 = jnp.where(dead, jnp.nan, v_pool)
+    out2 = paged_attention_chunk(q, k2, v2, tables, qpos, nl,
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert np.isfinite(np.asarray(out2)).all()
+
+
+def test_decode_wrapper_bounded_matches_chunk():
+    """The C == 1 decode specialization derives ceil(lengths/bs) and must
+    equal the explicit decode-as-chunk call under the same bound."""
+    b, kh, g, d, bs, nblk = 3, 2, 2, 64, 4, 4
+    ks = jax.random.split(jax.random.key(5), 5)
+    n = b * nblk
+    q = jax.random.normal(ks[0], (b, kh, g, d), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (n, bs, kh, d), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (n, bs, kh, d), jnp.float32)
+    perm = jax.random.permutation(ks[3], n)[: b * nblk].reshape(b, nblk)
+    tables = perm.astype(jnp.int32)
+    lengths = jax.random.randint(ks[4], (b,), 1, nblk * bs + 1, jnp.int32)
+    live = (lengths - 1) // bs + 1
+    dec = paged_attention(q, k_pool, v_pool, tables, lengths, live,
+                          interpret=True)
+    chunk = paged_attention_chunk(q[:, None], k_pool, v_pool, tables,
+                                  (lengths - 1)[:, None], live,
+                                  interpret=True)[:, 0]
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(chunk))
+    want = ref.paged_attention_ref(q, k_pool, v_pool, tables, lengths, live)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 # ========================================================== flash_attention
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,t,h,kh,d,cq,ck", [
