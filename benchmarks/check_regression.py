@@ -140,6 +140,24 @@ def check(fresh: dict, baseline: dict, tolerance: float) -> list:
             print(f"coarse bucket compiles: {compiles} "
                   f"(budget {MAX_COARSE_COMPILES}), "
                   f"savings vs pow2: {savings}")
+
+    # scheme-matrix reclamation invariant (machine-independent): every
+    # scheme's engine drain must reclaim all retired blocks.  The section
+    # only exists in JSONs produced since the Crystalline port, so it is
+    # checked on the FRESH results alone — an older committed baseline
+    # without it neither gates nor fails.
+    sm = fresh.get("scheme_matrix")
+    if sm is not None:
+        for name, row in sorted(sm.get("schemes", {}).items()):
+            left = row.get("unreclaimed")
+            if left != 0:
+                failures.append(
+                    f"scheme_matrix.{name}.unreclaimed = {left!r}: engine "
+                    f"drain must reclaim every retired block")
+        ratio = sm.get("crystalline_vs_wfe")
+        if isinstance(ratio, (int, float)):
+            print(f"scheme matrix: Crystalline vs WFE decode TPOT "
+                  f"{ratio:.2f}x (informational, not gated)")
     return failures
 
 

@@ -24,7 +24,7 @@ from repro.core.datastructures import (CRTurnQueue, HarrisMichaelList,
                                        KPQueue, MichaelHashMap, NatarajanBST,
                                        TreiberStack)
 
-DEFAULT_SCHEMES = ("WFE", "HE", "HP", "EBR", "2GEIBR", "Leak")
+DEFAULT_SCHEMES = ("WFE", "Crystalline", "HE", "HP", "EBR", "2GEIBR", "Leak")
 QUEUE_SCHEMES = DEFAULT_SCHEMES
 
 STRUCTS = {
@@ -38,7 +38,7 @@ STRUCTS = {
 
 
 def scheme_kwargs(name: str, n_threads: int, v: int = 30) -> dict:
-    if name in ("WFE", "HE"):
+    if name in ("WFE", "HE", "Crystalline"):
         return {"era_freq": max(1, n_threads * v // 10),
                 "cleanup_freq": 30}
     if name in ("EBR", "2GEIBR"):

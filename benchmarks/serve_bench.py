@@ -117,7 +117,7 @@ def run(n_requests: int = 12, new_tokens: int = 8):
     print("\n### Serving engine: scheduler-op latency + throughput by scheme")
     print(f"{'scheme':>8s} {'tok/s':>8s} {'tick p50 us':>12s} "
           f"{'tick p99 us':>12s} {'unreclaimed':>12s} {'slow paths':>11s}")
-    for scheme in ("WFE", "HE", "EBR", "2GEIBR"):
+    for scheme in ("WFE", "Crystalline", "HE", "EBR", "2GEIBR"):
         engine = ServeEngine(cfg, params, n_blocks=64, block_size=4,
                              max_batch=8, scheme=scheme,
                              era_freq=4, cleanup_freq=4)
@@ -406,6 +406,80 @@ def run_decode_heavy(chunk_size: int = 8, short_len: int = 4,
     return out
 
 
+# ------------------------------------------------------ SMR scheme matrix
+def run_scheme_matrix(schemes=("WFE", "Crystalline", "HE", "EBR", "2GEIBR"),
+                      n_requests: int = 8, prompt_len: int = 4,
+                      new_tokens: int = 16, block_size: int = 2,
+                      chunk_size: int = 8, build=_build_base) -> dict:
+    """Decode-path SMR scheme comparison under one fixed workload.
+
+    Every engine runs the SAME short-prompt / long-generation workload —
+    the decode steady state where per-step reclamation work (retire
+    stamping, era advances, interval scans) is the term the schemes
+    actually differ on.  One untimed warmup pass compiles the shape
+    buckets; the timed pass reports TTFT/TPOT percentiles, throughput,
+    and the scheme's reclamation telemetry.  The headline is
+    ``crystalline_vs_wfe`` — WFE TPOT p50 / Crystalline TPOT p50 (> 1
+    means the batched retire path wins on this runner).  The ratio is
+    reported, not gated: CI asserts the structural keys and the
+    machine-independent ``unreclaimed == 0``, never a timing race.
+    """
+    cfg, params = build()
+    n_blocks = n_requests * (-(-(prompt_len + new_tokens) // block_size)) + 8
+    out: dict = {"n_requests": n_requests, "prompt_len": prompt_len,
+                 "new_tokens": new_tokens, "schemes": {}}
+    print(f"\n### SMR scheme matrix: decode-path serving, "
+          f"{n_requests} requests x {new_tokens} generated tokens")
+    print(f"{'scheme':>12s} {'ttft p50 ms':>12s} {'tpot p50 ms':>12s} "
+          f"{'tok/s':>8s} {'retires':>8s} {'unreclaimed':>12s}")
+
+    def prompts():
+        return [[1 + (i * 7 + j) % 29 for j in range(prompt_len)]
+                for i in range(n_requests)]
+
+    for scheme in schemes:
+        engine = ServeEngine(cfg, params, n_blocks=n_blocks,
+                             block_size=block_size, max_batch=4,
+                             scheme=scheme, chunk_size=chunk_size,
+                             era_freq=4, cleanup_freq=4)
+        tid = engine.pool.register_thread()
+        for p in prompts():  # warmup: compiles every shape bucket
+            engine.submit(p, new_tokens)
+        engine.run(tid)
+        before = dict(engine.sched.stats)  # counters are cumulative
+        reqs = [engine.submit(p, new_tokens) for p in prompts()]
+        t0 = time.perf_counter()
+        engine.run(tid)
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        after = engine.sched.stats
+        row = latency_summary(reqs)
+        pool_stats = engine.pool.stats()
+        row["tok_s"] = n_requests * new_tokens / dt
+        row["dispatches"] = after["steps"] - before["steps"]
+        row["unreclaimed"] = pool_stats["unreclaimed"]
+        row["retires"] = pool_stats["retires"]
+        row["frees"] = pool_stats["frees"]
+        row["slow_paths"] = pool_stats.get("slow_paths", 0)
+        if "batches_sealed" in pool_stats:  # Crystalline telemetry
+            row["batches_sealed"] = pool_stats["batches_sealed"]
+            row["batches_freed"] = pool_stats["batches_freed"]
+        out["schemes"][scheme] = row
+        print(f"{scheme:>12s} {row['ttft']['p50_ms']:>12.1f} "
+              f"{row['tpot']['p50_ms']:>12.1f} {row['tok_s']:>8.1f} "
+              f"{row['retires']:>8d} {row['unreclaimed']:>12d}")
+    rows = out["schemes"]
+    if "WFE" in rows and "Crystalline" in rows:
+        out["crystalline_vs_wfe"] = (rows["WFE"]["tpot"]["p50_ms"]
+                                     / rows["Crystalline"]["tpot"]["p50_ms"])
+        verdict = ("beats" if out["crystalline_vs_wfe"] > 1 else "trails")
+        print(f"Crystalline vs WFE decode TPOT (p50): "
+              f"{out['crystalline_vs_wfe']:.2f}x — batched retirement "
+              f"{verdict} per-block retirement on this runner "
+              f"(informational, not gated)")
+    return out
+
+
 def run_smoke(chunk_size: int = 8) -> dict:
     """Seconds-scale CI smoke: tiny config, short prompts, same schema."""
     return {
@@ -420,6 +494,9 @@ def run_smoke(chunk_size: int = 8) -> dict:
         "decode_heavy": run_decode_heavy(
             chunk_size=chunk_size, n_short=6, n_long=2,
             short_new=8, long_new=190, block_size=2),
+        "scheme_matrix": run_scheme_matrix(
+            schemes=("WFE", "Crystalline"), n_requests=4,
+            new_tokens=8, chunk_size=chunk_size),
     }
 
 
@@ -435,6 +512,10 @@ _HEADLINES = {"prefill_heavy": "ttft_speedup",
               "prefix_heavy": "hit_rate",
               "decode_heavy": "tpot_speedup"}
 
+#: schemes the scheme_matrix section must cover when present (--smoke
+#: always runs both; the full matrix adds the rest of the registry)
+_SCHEME_MATRIX_REQUIRED = ("WFE", "Crystalline")
+
 
 def validate_results(results: dict) -> list:
     """Schema/shape check of a ttft_tpot results dict -> list of errors."""
@@ -442,9 +523,9 @@ def validate_results(results: dict) -> list:
     if results.get("schema") != "serve_bench/ttft_tpot/v1":
         errors.append(f"bad schema: {results.get('schema')!r}")
     present = [s for s in _TTFT_SCHEMA_MODES if s in results]
-    if not present:
+    if not present and "scheme_matrix" not in results:
         errors.append("no scenario section "
-                      f"({'/'.join(_TTFT_SCHEMA_MODES)})")
+                      f"({'/'.join(_TTFT_SCHEMA_MODES)}/scheme_matrix)")
     for section in present:
         sec = results[section]
         for mode in _TTFT_SCHEMA_MODES[section]:
@@ -464,6 +545,29 @@ def validate_results(results: dict) -> list:
         headline = _HEADLINES[section]
         if not isinstance(sec.get(headline), (int, float)):
             errors.append(f"{section}: missing {headline}")
+    if "scheme_matrix" in results:
+        sec = results["scheme_matrix"]
+        rows = sec.get("schemes")
+        if not isinstance(rows, dict):
+            errors.append("scheme_matrix: missing schemes table")
+            rows = {}
+        for name in _SCHEME_MATRIX_REQUIRED:
+            if name not in rows:
+                errors.append(f"scheme_matrix: missing scheme {name!r}")
+                continue
+            row = rows[name]
+            for metric in ("ttft", "tpot"):
+                m = row.get(metric)
+                if not isinstance(m, dict) or m.get("p50_ms") is None:
+                    errors.append(
+                        f"scheme_matrix.{name}.{metric}: no p50_ms")
+            # machine-independent: every engine's drain must reclaim all
+            if row.get("unreclaimed") != 0:
+                errors.append(
+                    f"scheme_matrix.{name}: unreclaimed = "
+                    f"{row.get('unreclaimed')!r} (drain must reach 0)")
+        if not isinstance(sec.get("crystalline_vs_wfe"), (int, float)):
+            errors.append("scheme_matrix: missing crystalline_vs_wfe")
     return errors
 
 
@@ -511,7 +615,7 @@ class _Cell:
 
 
 def run_scaling(workers: int = 4, shards: int = 4,
-                schemes=("WFE", "HE", "EBR", "2GEIBR"),
+                schemes=("WFE", "Crystalline", "HE", "EBR", "2GEIBR"),
                 n_requests: int = 64, new_tokens: int = 16,
                 n_blocks: int = 512, max_batch: int = 8,
                 reps: int = 3, build=_build_bench) -> dict:
@@ -565,7 +669,7 @@ def main(argv=None) -> int:
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--schemes", nargs="*",
-                    default=["WFE", "HE", "EBR", "2GEIBR"])
+                    default=["WFE", "Crystalline", "HE", "EBR", "2GEIBR"])
     # None = per-mode default (64/16 for the scaling matrix, 8/4 for the
     # prefill-heavy scenario) — a value-equality sentinel could not tell
     # an explicit 64 from the default
@@ -598,6 +702,10 @@ def main(argv=None) -> int:
                     help="shared system-prompt length for --prefix-heavy")
     ap.add_argument("--tail-len", type=int, default=16,
                     help="divergent tail length for --prefix-heavy")
+    ap.add_argument("--scheme-matrix", action="store_true",
+                    help="run the decode-path SMR scheme comparison "
+                         "(every --schemes engine on one fixed workload; "
+                         "headline: Crystalline vs WFE TPOT)")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI pass: tiny config, emits the "
                          "TTFT/TPOT JSON schema")
@@ -612,11 +720,13 @@ def main(argv=None) -> int:
     if args.smoke:
         results = run_smoke(chunk_size=min(args.chunk_size, 8))
         savings = results["decode_heavy"]["compile_savings"]
+        matrix_rows = results["scheme_matrix"]["schemes"]
         ok = (results["prefill_heavy"]["ttft_speedup"] > 1.0
               and results["prefix_heavy"]["hit_rate"] > 0
               and results["prefix_heavy"]["chunks_saved"] > 0
               and results["decode_heavy"]["tpot_speedup"] > 1.0
-              and (savings is None or savings > 0))
+              and (savings is None or savings > 0)
+              and all(r["unreclaimed"] == 0 for r in matrix_rows.values()))
     elif args.prefill_heavy:
         results = {"schema": "serve_bench/ttft_tpot/v1"}
         results["prefill_heavy"] = run_prefill_heavy(
@@ -632,6 +742,15 @@ def main(argv=None) -> int:
             new_tokens=args.new_tokens or 4)
         ok = (results["prefix_heavy"]["hit_rate"] > 0
               and results["prefix_heavy"]["chunks_saved"] > 0)
+    elif args.scheme_matrix:
+        results = {"schema": "serve_bench/ttft_tpot/v1"}
+        results["scheme_matrix"] = run_scheme_matrix(
+            schemes=tuple(args.schemes),
+            n_requests=args.requests or 8,
+            new_tokens=args.new_tokens or 16,
+            chunk_size=min(args.chunk_size, 8))
+        ok = all(r["unreclaimed"] == 0
+                 for r in results["scheme_matrix"]["schemes"].values())
     elif args.decode_heavy:
         results = {"schema": "serve_bench/ttft_tpot/v1"}
         results["decode_heavy"] = run_decode_heavy(

@@ -137,7 +137,7 @@ class BlockPool:
             raise ValueError(
                 "Hazard Pointers cannot protect a step snapshot with one "
                 "reservation; use an era scheme (WFE/HE) or epoch scheme")
-        if scheme in ("WFE", "HE"):  # era-slot schemes
+        if scheme in ("WFE", "HE", "Crystalline"):  # era-slot schemes
             smr_kwargs = {"max_hes": max_hes, **smr_kwargs}
         if scheme in ("EBR", "2GEIBR"):  # epoch-frequency naming differs
             smr_kwargs = {("epoch_freq" if k == "era_freq" else k): v

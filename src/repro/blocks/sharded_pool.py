@@ -3,8 +3,9 @@
 One monolithic :class:`~repro.blocks.block_pool.BlockPool` funnels every
 alloc/retire through a single SMR instance — one free stack, one era clock,
 one set of retire lists.  At serving scale that instance becomes the
-contention point the paper's multi-instance direction (Crystalline) warns
-about.  This module splits the pool into ``n_shards`` independent shards:
+contention point the Crystalline paper (arXiv 2108.02763, ported in
+``core/crystalline.py``) warns about.  This module splits the pool into
+``n_shards`` independent shards:
 
 * each shard is a full ``BlockPool`` owning a disjoint slot range
   ``[base, base + per_shard)`` of the ONE device pool (the engine's KV

@@ -19,6 +19,7 @@ from .atomics import (
     PtrView,
     TriplePtrView,
 )
+from .crystalline import Crystalline
 from .ebr import EBR
 from .era_table import (BACKENDS, ArrayRetireList, EraTable,
                         batched_can_delete)
@@ -31,6 +32,7 @@ from .wfe import WFE
 
 SCHEMES = {
     "WFE": WFE,
+    "Crystalline": Crystalline,
     "HE": HazardEras,
     "HP": HazardPointers,
     "EBR": EBR,
@@ -65,6 +67,7 @@ __all__ = [
     "Block",
     "SMRScheme",
     "WFE",
+    "Crystalline",
     "HazardEras",
     "HazardPointers",
     "EBR",

@@ -43,12 +43,15 @@ class Block:
     that unsafe reclamation manifests as an explicit error.
     """
 
-    __slots__ = ("alloc_era", "retire_era", "birth_epoch", "freed", "home_shard")
+    __slots__ = ("alloc_era", "retire_era", "birth_epoch", "batch_era",
+                 "batch", "freed", "home_shard")
 
     def __init__(self) -> None:
         self.alloc_era = 0
         self.retire_era = INF_ERA
         self.birth_epoch = 0  # used by IBR
+        self.batch_era = 0  # used by Crystalline: min alloc era of the batch
+        self.batch = None  # Crystalline's shared per-batch record
         self.freed = False
         # owning SMR shard (sharded pools); eras are only comparable within
         # one instance's clock, so a block must retire where it was born

@@ -35,7 +35,8 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--scheme", default="WFE",
-                    choices=("WFE", "HE", "HP", "EBR", "2GEIBR"))
+                    choices=("WFE", "Crystalline", "HE", "HP", "EBR",
+                             "2GEIBR"))
     ap.add_argument("--n-blocks", type=int, default=64)
     ap.add_argument("--block-size", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=8)

@@ -16,6 +16,12 @@ from repro.core.era_table import (ArrayRetireList, EraTable,
                                   batched_can_delete)
 from repro.core.smr_base import Block
 
+try:  # optional dep: only the property tests below need it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
 BACKENDS = ("scalar", "numpy", "pallas")
 
 
@@ -93,13 +99,17 @@ def _random_history(smr, rng, n_ops=160, n_threads=3, n_cells=2):
     return tids
 
 
-@pytest.mark.parametrize("scheme", ["WFE", "HE", "2GEIBR", "EBR"])
+@pytest.mark.parametrize("scheme", ["WFE", "Crystalline", "HE", "2GEIBR",
+                                    "EBR"])
 @pytest.mark.parametrize("seed", range(4))
 def test_scheme_masks_identical_across_backends(scheme, seed):
     """deletable_mask is bit-identical across backends after random runs
     (live reservations, INF slots, and mixed retire lists)."""
-    kw = ({"era_freq": 3, "cleanup_freq": 10 ** 9} if scheme in ("WFE", "HE")
+    kw = ({"era_freq": 3, "cleanup_freq": 10 ** 9}
+          if scheme in ("WFE", "HE", "Crystalline")
           else {"epoch_freq": 3, "cleanup_freq": 10 ** 9})
+    if scheme == "Crystalline":
+        kw["batch_size"] = 4  # ragged vs the history's retire count
     smr = make_scheme(scheme, max_threads=3, **kw)
     # zlib.crc32 is stable across processes (hash() is salted per run)
     import zlib
@@ -135,12 +145,49 @@ def test_wfe_special_slots_equivalent_across_backends(seed):
     smr.reservations[t0][smr.max_hes].store_a(INF_ERA)
 
 
+@pytest.mark.parametrize("seed", range(4))
+def test_crystalline_batch_unit_masks_across_backends(seed):
+    """Crystalline's batched retirement: after sealing, every backend's
+    mask is bit-identical AND decides each batch all-or-none (the members
+    share one (batch_era, retire_era) conflict interval, so no backend can
+    split a batch)."""
+    smr = make_scheme("Crystalline", max_threads=3, era_freq=2,
+                      cleanup_freq=10 ** 9, batch_size=3)
+    rng = np.random.default_rng(9000 + seed)
+    tids = _random_history(smr, rng)
+    for tid in tids:
+        smr.seal(tid)  # force the ragged remainder into a final batch
+    assert sum(smr.batches_sealed) > 0
+    for tid in tids:
+        masks = [smr.deletable_mask(tid, b) for b in BACKENDS]
+        for b, m in zip(BACKENDS[1:], masks[1:]):
+            np.testing.assert_array_equal(masks[0], m,
+                                          err_msg=f"Crystalline/{b}/t{tid}")
+        decisions = {}
+        for i, blk in enumerate(smr.retire_lists[tid]):
+            decisions.setdefault(id(blk.batch), set()).add(bool(masks[0][i]))
+        assert all(len(d) == 1 for d in decisions.values()), \
+            "a batch was split: members got different deletable decisions"
+    # a reservation pinning ONE member must pin the member's whole batch
+    t0 = tids[0]
+    blks = [smr.alloc_block(_Node, t0, i) for i in range(smr.batch_size)]
+    for b in blks:
+        smr.retire(b, t0)  # exactly one full batch -> auto-sealed
+    smr.reservations[t0][0].store_a(blks[-1].alloc_era)
+    for b in BACKENDS:
+        mask = smr.deletable_mask(t0, b)
+        assert not mask[-smr.batch_size:].any(), \
+            f"{b}: one pinned member must hold its whole batch"
+    smr.reservations[t0][0].store_a(INF_ERA)
+
+
 # ------------------------------------------------- batched vs scalar flush
-@pytest.mark.parametrize("scheme", ["WFE", "HE", "2GEIBR"])
+@pytest.mark.parametrize("scheme", ["WFE", "Crystalline", "HE", "2GEIBR"])
 def test_cleanup_batch_frees_exactly_what_flush_would(scheme):
     """With quiescent reservations, cleanup_batch drains everything the
     scalar flush would (and nothing a live reservation pins)."""
-    kw = ({"era_freq": 1, "cleanup_freq": 10 ** 9} if scheme in ("WFE", "HE")
+    kw = ({"era_freq": 1, "cleanup_freq": 10 ** 9}
+          if scheme in ("WFE", "HE", "Crystalline")
           else {"epoch_freq": 1, "cleanup_freq": 10 ** 9})
     smr = make_scheme(scheme, max_threads=2, **kw)
     t0 = smr.register_thread()
@@ -316,3 +363,139 @@ def test_era_table_interval_snapshot():
     # snapshots are copies, not views
     et.lo[0, 1] = 5
     assert lo[1] == 4
+
+
+# ------------------------------------------------- property tests (hypothesis)
+# The shapes Crystalline's batched retirement actually produces: ragged
+# batch sizes (empty included), shared per-batch conflict intervals, and
+# interval reservations mixing INF slots with live pins.  The profile in
+# tests/conftest.py pins deadline=None + derandomize for CI stability.
+if not HAVE_HYPOTHESIS:
+    _SKIP = pytest.mark.skip(reason="hypothesis not installed "
+                                    "(pip install -r requirements-dev.txt)")
+
+    @_SKIP
+    def test_property_ragged_batches_backends_identical():
+        pass
+
+    @_SKIP
+    def test_property_array_retire_list_matches_model():
+        pass
+
+    @_SKIP
+    def test_property_crystalline_single_slot_pool():
+        pass
+else:
+    @settings(max_examples=60)
+    @given(st.data())
+    def test_property_ragged_batches_backends_identical(data):
+        """Batch-shaped retire lists vs interval reservations: the three
+        backends stay bitwise-identical and never split a batch."""
+        sizes = data.draw(st.lists(st.integers(0, 5), min_size=1,
+                                   max_size=8), label="batch sizes")
+        era = st.integers(0, 60)
+        alloc, retire, batch_of = [], [], []
+        for bi, size in enumerate(sizes):
+            if size == 0:
+                continue  # an empty batch seals nothing
+            members = [data.draw(era) for _ in range(size)]
+            batch_era = min(members)
+            retire_era = max(members) + data.draw(st.integers(0, 12))
+            for _ in range(size):
+                alloc.append(batch_era)
+                retire.append(retire_era)
+                batch_of.append(bi)
+        n_slots = data.draw(st.integers(1, 6), label="reservation slots")
+        lo, hi = [], []
+        for _ in range(n_slots):
+            if data.draw(st.booleans()):
+                lo.append(MIRROR_INF)
+                hi.append(MIRROR_INF)
+            else:
+                a = data.draw(era)
+                lo.append(a)
+                hi.append(a + data.draw(st.integers(0, 12)))
+        alloc = np.asarray(alloc, np.int32)
+        retire = np.asarray(retire, np.int32)
+        lo = np.asarray(lo, np.int32)
+        hi = np.asarray(hi, np.int32)
+        if len(alloc) == 0:
+            # all batches empty: scalar/numpy agree on the empty mask (the
+            # schemes never hand the pallas kernel a zero-row scan)
+            for b in ("scalar", "numpy"):
+                assert len(batched_can_delete(alloc, retire, lo, hi, b)) == 0
+            return
+        masks = [batched_can_delete(alloc, retire, lo, hi, b)
+                 for b in BACKENDS]
+        for b, m in zip(BACKENDS[1:], masks[1:]):
+            np.testing.assert_array_equal(masks[0], m, err_msg=b)
+        decisions = {}
+        for i, bi in enumerate(batch_of):
+            decisions.setdefault(bi, set()).add(bool(masks[0][i]))
+        assert all(len(d) == 1 for d in decisions.values()), \
+            "members of one batch got different deletable decisions"
+
+    @settings(max_examples=40)
+    @given(st.data())
+    def test_property_array_retire_list_matches_model(data):
+        """ArrayRetireList under random append/compact/rebuild sequences:
+        the packed era columns always mirror the surviving block list."""
+        rl = ArrayRetireList(capacity=1)  # force repeated growth
+        model = []
+        counter = [0]
+
+        def add():
+            b = _Node(counter[0])
+            b.alloc_era = counter[0]
+            b.retire_era = counter[0] + data.draw(st.integers(0, 9))
+            counter[0] += 1
+            rl.append(b)
+            model.append(b)
+
+        for _ in range(data.draw(st.integers(1, 25), label="steps")):
+            op = data.draw(st.sampled_from(["append", "compact", "rebuild"]))
+            if op == "append":
+                add()
+            elif op == "compact":
+                mask = np.array([data.draw(st.booleans())
+                                 for _ in range(len(model))], bool)
+                freed = rl.compact(mask, lambda b: None)
+                assert freed == int(mask.sum())
+                model[:] = [b for b, d in zip(model, mask) if not d]
+            else:
+                keep = [b for b in model if data.draw(st.booleans())]
+                rl[:] = keep
+                model[:] = keep
+            assert len(rl) == len(model)
+            alloc, retire = rl.arrays()
+            np.testing.assert_array_equal(
+                alloc, [b.alloc_era for b in model])
+            np.testing.assert_array_equal(
+                retire, [b.retire_era for b in model])
+
+    @settings(max_examples=15)
+    @given(batch_size=st.integers(1, 4), cycles=st.integers(1, 5),
+           backend=st.sampled_from(["scalar", "numpy"]))
+    def test_property_crystalline_single_slot_pool(batch_size, cycles,
+                                                   backend):
+        """A single-slot pool under Crystalline: every alloc/retire cycle
+        gets its one slot back regardless of batch size (a partial batch
+        must not strand the only slot)."""
+        from repro.blocks import BlockPool
+
+        pool = BlockPool(1, scheme="Crystalline", max_threads=2,
+                         era_freq=1, cleanup_freq=1, batch_size=batch_size,
+                         cleanup_backend=backend, vectorized_threshold=1)
+        tid = pool.register_thread()
+        for _ in range(cycles):
+            blk = pool.alloc(tid)
+            pool.retire(blk, tid)
+            for _ in range(8):
+                if pool.free_blocks == 1:
+                    break
+                pool.cleanup_all()
+                pool.advance_eras(tid)
+            assert pool.free_blocks == 1, "the only slot was stranded"
+            assert pool.unreclaimed() == 0
+        s = pool.stats()
+        assert s["frees"] == s["retires"] == cycles

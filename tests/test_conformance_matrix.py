@@ -34,7 +34,7 @@ from repro.core.datastructures import (CRTurnQueue, HarrisMichaelList,
 
 pytestmark = pytest.mark.stress
 
-SCHEMES = ("WFE", "HE", "HP", "EBR", "2GEIBR")
+SCHEMES = ("WFE", "Crystalline", "HE", "HP", "EBR", "2GEIBR")
 KV_STRUCTS = {
     "list": HarrisMichaelList,
     "hashmap": MichaelHashMap,
@@ -51,24 +51,16 @@ def _smr(scheme, n=N_THREADS):
     kw = ({"era_freq": 2, "cleanup_freq": 2} if scheme in ("WFE", "HE")
           else {"epoch_freq": 2, "cleanup_freq": 2}
           if scheme in ("EBR", "2GEIBR") else {"cleanup_freq": 2})
+    if scheme == "Crystalline":
+        # batch_size=3: uneven vs the workload sizes, so sealed batches AND
+        # pending remainders both occur at quiescence
+        kw["batch_size"] = 3
     return make_scheme(scheme, max_threads=n, **kw)
-
-
-def _drain_to_zero(smr, rounds=100):
-    for tid in range(smr.max_threads):
-        smr.end_op(tid)
-    for _ in range(rounds):
-        if smr.unreclaimed() == 0:
-            return 0
-        for tid in range(smr.max_threads):
-            smr.advance_era(tid)
-            smr.flush(tid)
-    return smr.unreclaimed()
 
 
 @pytest.mark.parametrize("scheme", SCHEMES)
 @pytest.mark.parametrize("name", sorted(KV_STRUCTS))
-def test_kv_matrix_mixed_workload(name, scheme):
+def test_kv_matrix_mixed_workload(name, scheme, quiescence_check):
     smr = _smr(scheme)
     ds = KV_STRUCTS[name](smr)
     start = threading.Barrier(N_THREADS)
@@ -122,13 +114,12 @@ def test_kv_matrix_mixed_workload(name, scheme):
             assert ds.get(key, tid) == models[w].get(key), \
                 (name, scheme, "final", key)
     smr.clear(tid)
-    left = _drain_to_zero(smr)
-    assert left == 0, f"{name}/{scheme}: {left} blocks unreclaimed"
+    quiescence_check(smr, label=f"{name}/{scheme}")
 
 
 @pytest.mark.parametrize("scheme", SCHEMES)
 @pytest.mark.parametrize("name", sorted(QUEUES))
-def test_queue_matrix_mpmc(name, scheme):
+def test_queue_matrix_mpmc(name, scheme, quiescence_check):
     smr = _smr(scheme)
     q = QUEUES[name](smr)
     n_items = 120
@@ -183,12 +174,11 @@ def test_queue_matrix_mpmc(name, scheme):
             sub = [v for v in popped[c] if v // 10_000 == p]
             assert sub == sorted(sub), (name, scheme, "per-producer order")
     assert q.dequeue(0) is None
-    left = _drain_to_zero(smr)
-    assert left == 0, f"{name}/{scheme}: {left} blocks unreclaimed"
+    quiescence_check(smr, label=f"{name}/{scheme}")
 
 
 @pytest.mark.parametrize("scheme", SCHEMES)
-def test_stack_matrix_concurrent(scheme):
+def test_stack_matrix_concurrent(scheme, quiescence_check):
     smr = _smr(scheme)
     s = TreiberStack(smr)
     n_items = 150
@@ -234,5 +224,26 @@ def test_stack_matrix_concurrent(scheme):
     got_all = sorted(popped[0] + popped[1] + residual)
     want = sorted(p * 10_000 + i for p in range(2) for i in range(n_items))
     assert got_all == want, (scheme, "push/pop multiset mismatch")
-    left = _drain_to_zero(smr)
-    assert left == 0, f"stack/{scheme}: {left} blocks unreclaimed"
+    quiescence_check(smr, label=f"stack/{scheme}")
+
+
+# ---------------------------------------------------- no-reclamation control
+@pytest.mark.parametrize("name", sorted(KV_STRUCTS))
+def test_leak_control_fails_quiescence(name, quiescence_check):
+    """Leak in the matrix as the negative control: the same workload must
+    FAIL the quiescence check — if it didn't, a scheme that silently
+    stopped reclaiming would pass the whole matrix too."""
+    smr = make_scheme("Leak", max_threads=N_THREADS)
+    ds = KV_STRUCTS[name](smr)
+    tid = smr.register_thread()
+    r = random.Random(7)
+    for i in range(OPS):
+        key = r.randrange(KEYS_PER_THREAD)
+        if r.random() < 0.5:
+            ds.insert(key, (0, i), tid)
+        else:
+            ds.delete(key, tid)
+    assert sum(smr.retire_count) > 0, "workload never retired a node"
+    left = quiescence_check(smr, label=f"{name}/Leak", expect_drain=False)
+    assert left == sum(smr.retire_count), \
+        "Leak must hold every retired node (frees nothing, loses nothing)"

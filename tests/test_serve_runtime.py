@@ -2,7 +2,7 @@
 
 Covers the ISSUE-2 tentpole surface:
 
-* `ServeEngine.drain` terminates with ``unreclaimed() == 0`` for all four
+* `ServeEngine.drain` terminates with ``unreclaimed() == 0`` for all five
   pool schemes (the bug class the old magic 64-round loop papered over);
 * sharded engines generate EXACTLY the same tokens as unsharded ones
   (request-level sharding must not change decode results);
@@ -22,7 +22,7 @@ from repro.core.distributed_eras import ShardedEraDomain
 from repro.models import build_model
 from repro.serve import ServeEngine, ServeRuntime
 
-POOL_SCHEMES = ("WFE", "HE", "EBR", "2GEIBR")
+POOL_SCHEMES = ("WFE", "Crystalline", "HE", "EBR", "2GEIBR")
 PROMPTS = [[5, 9, 2], [11, 3, 8, 1], [7], [2, 4], [9, 9, 1], [13]]
 N_NEW = 5
 
@@ -50,7 +50,8 @@ def reference_tokens(dense_model):
 
 # ============================================================ drain
 @pytest.mark.parametrize("scheme", POOL_SCHEMES)
-def test_engine_drain_terminates_all_schemes(dense_model, scheme):
+def test_engine_drain_terminates_all_schemes(dense_model, scheme,
+                                             quiescence_check):
     """Final drain reaches unreclaimed() == 0 without magic round counts."""
     cfg, params = dense_model
     engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
@@ -60,9 +61,9 @@ def test_engine_drain_terminates_all_schemes(dense_model, scheme):
     stats = engine.run(tid)
     assert stats["completed"] == 4
     assert all(r.done for r in reqs)
-    assert engine.pool.unreclaimed() == 0, \
-        f"{scheme}: drain left retired blocks unreclaimed"
-    assert engine.pool.free_blocks == 32, f"{scheme}: pool slots leaked"
+    # rounds=0: engine.run's OWN drain must already have reached zero —
+    # the fixture only asserts, it must not paper over a drain bug
+    quiescence_check(engine.pool, label=scheme, rounds=0)
 
 
 def test_engine_drain_bounded_under_live_reservation(dense_model):
@@ -81,8 +82,30 @@ def test_engine_drain_bounded_under_live_reservation(dense_model):
     assert engine.drain(t0) == 0
 
 
+# ============================================================ token exactness
+def test_crystalline_engine_matches_reference_tokens(dense_model,
+                                                     reference_tokens,
+                                                     quiescence_check):
+    """Batched retirement must change WHEN slots recycle, never tokens."""
+    cfg, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
+                         scheme="Crystalline", era_freq=1, cleanup_freq=1)
+    tid = engine.pool.register_thread()
+    reqs = [engine.submit(p, N_NEW) for p in PROMPTS]
+    stats = engine.run(tid)
+    assert stats["completed"] == len(PROMPTS)
+    for req, want in zip(reqs, reference_tokens):
+        assert req.generated == want, (req.rid, req.generated, want)
+    quiescence_check(engine.pool, label="Crystalline", rounds=0)
+    smr_stats = engine.pool.stats()
+    assert smr_stats["batches_sealed"] > 0, \
+        "the serving workload never sealed a batch"
+    assert smr_stats["batches_freed"] == smr_stats["batches_sealed"]
+
+
 # ============================================================ sharded engine
-def test_sharded_engine_matches_unsharded(dense_model, reference_tokens):
+def test_sharded_engine_matches_unsharded(dense_model, reference_tokens,
+                                          quiescence_check):
     """Request-level sharding changes placement, never tokens."""
     cfg, params = dense_model
     engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
@@ -93,8 +116,7 @@ def test_sharded_engine_matches_unsharded(dense_model, reference_tokens):
     assert stats["completed"] == len(PROMPTS)
     for req, want in zip(reqs, reference_tokens):
         assert req.generated == want, (req.rid, req.generated, want)
-    assert engine.pool.unreclaimed() == 0
-    assert engine.pool.free_blocks == 32
+    quiescence_check(engine.pool, rounds=0)
     # both shards actually hosted requests
     shards_used = {r.shard for r in reqs}
     assert shards_used == {0, 1}
@@ -123,11 +145,14 @@ def test_multi_worker_runtime_correct_and_reclaimed(dense_model,
         st["steps"] for st in engine.sched._worker_stats.values())
 
 
-def test_multi_worker_runtime_wfe_forced_slow_path(dense_model):
-    """Concurrent workers with WFE's slow path forced end-to-end."""
+@pytest.mark.parametrize("scheme", ("WFE", "Crystalline"))
+def test_multi_worker_runtime_forced_slow_path(dense_model, scheme):
+    """Concurrent workers with the wait-free slow path forced end-to-end
+    (Crystalline inherits WFE's helping protocol and must keep it live
+    under batched retirement)."""
     cfg, params = dense_model
     engine = ServeEngine(cfg, params, n_blocks=32, block_size=4, max_batch=4,
-                         n_shards=2, max_threads=8, era_freq=1,
+                         scheme=scheme, n_shards=2, max_threads=8, era_freq=1,
                          cleanup_freq=1, max_attempts=1)
     reqs = [engine.submit([3, 1, 4], 4) for _ in range(4)]
     stats = ServeRuntime(engine, n_workers=2).serve()
@@ -139,8 +164,9 @@ def test_multi_worker_runtime_wfe_forced_slow_path(dense_model):
 
 
 # ============================================================ sharded pool
-def test_sharded_pool_routing_and_reclamation():
-    pool = ShardedBlockPool(12, n_shards=3, max_threads=4,
+@pytest.mark.parametrize("scheme", ("WFE", "Crystalline"))
+def test_sharded_pool_routing_and_reclamation(scheme, quiescence_check):
+    pool = ShardedBlockPool(12, n_shards=3, max_threads=4, scheme=scheme,
                             era_freq=1, cleanup_freq=1)
     tid = pool.register_thread()
     # pinned allocation stays in range
@@ -155,11 +181,7 @@ def test_sharded_pool_routing_and_reclamation():
     assert len({b.home_shard for b in blks}) == 3
     for b in blks:
         pool.retire(b, tid)
-    for _ in range(8):
-        pool.cleanup_all()
-        pool.advance_eras(tid)
-    assert pool.unreclaimed() == 0
-    assert pool.free_blocks == 12
+    quiescence_check(pool, label=f"sharded/{scheme}", tid=tid)
 
 
 def test_sharded_pool_cross_shard_protection():

@@ -21,6 +21,7 @@ Run for every scheme that claims ``wait_free`` or ``bounded_memory``.
 import threading
 
 import pytest
+from conftest import drain_to_zero
 
 from repro.core import SCHEMES, Block, make_scheme
 from repro.core.atomics import AtomicRef, PtrView
@@ -51,13 +52,15 @@ class _Node(Block):
 
 def _make(name: str, max_threads: int, force_slow: bool = False):
     kw = {}
-    if name in ("WFE", "HE"):
+    if name in ("WFE", "HE", "Crystalline"):
         kw = {"era_freq": 1, "cleanup_freq": 1}
     elif name in ("EBR", "2GEIBR"):
         kw = {"epoch_freq": 1, "cleanup_freq": 1}
     elif name == "HP":
         kw = {"cleanup_freq": 1}
-    if force_slow and name == "WFE":
+    if name == "Crystalline":
+        kw["batch_size"] = 3  # small batches: frequent seals under stress
+    if force_slow and name in ("WFE", "Crystalline"):
         kw["max_attempts"] = 1  # slow path on every get_protected
     return make_scheme(name, max_threads=max_threads, **kw)
 
@@ -109,20 +112,8 @@ def _hammer(smr, *, n_threads=N_THREADS, ops=OPS):
     return errors, max(peak), sum(smr.retire_count)
 
 
-def _drain(smr, rounds=100):
-    for tid in range(smr.max_threads):
-        smr.end_op(tid)
-    for _ in range(rounds):
-        if smr.unreclaimed() == 0:
-            break
-        for tid in range(smr.max_threads):
-            smr.advance_era(tid)
-            smr.flush(tid)
-    return smr.unreclaimed()
-
-
 @pytest.mark.parametrize("name", STRESS_SCHEMES)
-def test_stress_no_uaf_and_bounded(name):
+def test_stress_no_uaf_and_bounded(name, quiescence_check):
     smr = _make(name, N_THREADS, force_slow=True)
     errors, peak, retired = _hammer(smr)
     assert not errors, errors[0]
@@ -130,33 +121,56 @@ def test_stress_no_uaf_and_bounded(name):
     if SCHEMES[name].bounded_memory:
         # generous c.T^2.H-style bound (paper Thm. 4 shape): stalled-free
         # runs stay far below it; unbounded growth would blow through it
+        # (Crystalline's batching adds at most batch_size per thread,
+        # absorbed by the constant)
         h = getattr(smr, "max_hes", getattr(smr, "max_hps", 1))
         bound = 4 * N_THREADS * (N_THREADS * h + 64)
         assert peak <= bound, f"{name}: unreclaimed peaked at {peak} > {bound}"
-        assert _drain(smr) == 0, f"{name}: blocks leaked at quiescence"
+        quiescence_check(smr, label=name)
 
 
-def test_stress_wfe_forced_slow_path_helping():
+@pytest.mark.parametrize("name", ("WFE", "Crystalline"))
+def test_stress_forced_slow_path_helping(name, quiescence_check):
     """8 threads, max_attempts=1: the helping protocol must actually fire.
 
     Whether a given request self-completes or is served by a helper is a
     scheduling race, so one hammer round may legitimately see zero helps;
     across a handful of rounds a live helping path fires with certainty
-    while a dead one never does.
+    while a dead one never does.  Crystalline inherits WFE's slow path and
+    must keep it alive under batched retirement.
     """
     slow = helped = 0
     for _ in range(6):
-        smr = _make("WFE", N_THREADS, force_slow=True)
+        smr = _make(name, N_THREADS, force_slow=True)
         errors, peak, _ = _hammer(smr)
         assert not errors, errors[0]
         slow += sum(smr.slow_path_count)
         helped += sum(smr.helped_count)
-        assert _drain(smr) == 0, "WFE leaked blocks at quiescence"
+        quiescence_check(smr, label=name)
         if helped:
             break
     assert slow > 0, "slow path never taken"
     assert helped > 0, \
         "no request was ever served by a helper (helping machinery dead)"
+
+
+def test_stress_crystalline_batch_linkage():
+    """Batched retirement under contention: every retired block is sealed
+    into a batch, and at quiescence every batch is fully freed (the
+    per-batch live counter reaches zero exactly once per batch)."""
+    smr = _make("Crystalline", N_THREADS, force_slow=True)
+    errors, _, retired = _hammer(smr)
+    assert not errors, errors[0]
+    assert retired > 0
+    assert drain_to_zero(smr) == 0, "Crystalline leaked at quiescence"
+    sealed = sum(smr.batches_sealed)
+    freed_batches = sum(smr.batches_freed)
+    assert sealed > 0, "no batch was ever sealed"
+    assert freed_batches == sealed, \
+        (f"{sealed} batches sealed but {freed_batches} fully freed — "
+         f"a batch was split or its live counter drifted")
+    assert smr.pending() == 0
+    assert sum(smr.free_count) == sum(smr.retire_count)
 
 
 def test_stress_wfe_era_advancers_vs_slow_path():
@@ -205,4 +219,4 @@ def test_stress_wfe_era_advancers_vs_slow_path():
         t.join(timeout=300)
     assert not errors, errors[0]
     assert sum(smr.slow_path_count) > 0
-    assert _drain(smr) == 0
+    assert drain_to_zero(smr) == 0
