@@ -24,7 +24,8 @@ committed baseline:
 
 The relative invariants (chunked TTFT speedup > 1, prefix hit-rate > 0,
 coarse buckets saving recompiles and staying within a fixed per-shape
-compile budget) are also re-asserted from the fresh JSON — they are
+compile budget, open-loop interactive goodput > 0 under Poisson arrival
+pressure) are also re-asserted from the fresh JSON — they are
 machine-independent and have NO tolerance.  The compile-count bounds are
 the bucket-policy gate: a regression that reintroduces per-shape
 recompiles (e.g. bucketing on the current width again) shows up as a
@@ -63,6 +64,13 @@ INVARIANTS = (
 #: ladder (4+ shapes in the smoke scenario, measured 2 for coarse) and
 #: blows this budget even on an arbitrarily fast runner.
 MAX_COARSE_COMPILES = 3
+
+#: absolute slack on the open-loop interactive goodput band: goodput is a
+#: FRACTION of (16) smoke requests meeting SLO, so one request flipping
+#: across the line moves it by ~0.1 on a noisy shared runner — the band
+#: catches collapses (starvation regressions push it toward 0), not
+#: single-request jitter
+GOODPUT_SLACK = 0.35
 
 
 def _p50(results: dict, section: str, mode: str, metric: str):
@@ -158,6 +166,49 @@ def check(fresh: dict, baseline: dict, tolerance: float) -> list:
         if isinstance(ratio, (int, float)):
             print(f"scheme matrix: Crystalline vs WFE decode TPOT "
                   f"{ratio:.2f}x (informational, not gated)")
+
+    # open-loop goodput gate: interactive-class requests must keep
+    # meeting their SLO under Poisson arrival pressure.  The invariant
+    # (goodput_interactive > 0 with interactive arrivals present) is
+    # machine-independent — the SLO targets are multiples of the runner's
+    # OWN unloaded calibration, so a slow runner gets a proportionally
+    # slower target, not a free pass.  The band against the committed
+    # baseline only applies when the baseline HAS the section (older
+    # baselines neither gate nor fail, like scheme_matrix above).
+    ol = fresh.get("open_loop")
+    if ol is None:
+        failures.append("open_loop: section missing from fresh results")
+    else:
+        gi = ol.get("goodput_interactive")
+        if not isinstance(gi, (int, float)):
+            failures.append("open_loop.goodput_interactive: missing")
+        elif not gi > 0:
+            failures.append(
+                f"open_loop.goodput_interactive = {gi}: no interactive "
+                f"request met its SLO under open-loop arrival (decode "
+                f"starvation or admission failure)")
+        if not ol.get("n_interactive"):
+            failures.append("open_loop.n_interactive = 0: the goodput "
+                            "gate is vacuous without interactive arrivals")
+        base_ol = baseline.get("open_loop")
+        if (base_ol is not None and isinstance(gi, (int, float))
+                and isinstance(base_ol.get("goodput_interactive"),
+                               (int, float))):
+            floor = base_ol["goodput_interactive"] - GOODPUT_SLACK
+            ok = gi >= floor
+            print(f"open loop: interactive goodput {gi:.2f} "
+                  f"(baseline {base_ol['goodput_interactive']:.2f}, "
+                  f"floor {floor:.2f}) {'ok' if ok else 'FAIL'}")
+            if not ok:
+                failures.append(
+                    f"open_loop.goodput_interactive = {gi:.2f}: below "
+                    f"baseline {base_ol['goodput_interactive']:.2f} - "
+                    f"{GOODPUT_SLACK} slack")
+        gap = ol.get("gap", {})
+        if isinstance(gap, dict) and gap.get("p95_ms") is not None:
+            print(f"open loop: worst per-token gap p95 "
+                  f"{gap['p95_ms']:.1f} ms / p99 {gap['p99_ms']:.1f} ms "
+                  f"(informational, not gated)")
     return failures
 
 

@@ -42,6 +42,18 @@ Modes:
 
   PYTHONPATH=src python benchmarks/serve_bench.py --decode-heavy
 
+* ``run_open_loop()`` / ``--open-loop`` — the decode-starvation scenario:
+  requests ARRIVE on a Poisson clock (``--arrival-rate`` req/s) instead
+  of all-at-once, the load every closed-loop scenario above cannot
+  produce — sustained prompt arrival WHILE earlier requests decode.
+  Reports goodput-under-SLO (fraction of requests meeting their TTFT and
+  TPOT targets, split by SLO class: ``--batch-frac`` of arrivals are
+  batch-class), TPOT p95/p99, and the worst per-token gap percentiles —
+  the starvation symptom the TPOT *mean* hides.  SLO targets default to
+  runner-independent multiples of an unloaded calibration pass.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --open-loop --arrival-rate 8
+
 * ``--smoke`` — a seconds-scale tiny-config pass over ALL scenarios for
   CI, emitting the TTFT/TPOT JSON schema (``--json PATH``) the bench
   trajectory and the perf-regression gate consume.  The bench validates
@@ -55,6 +67,7 @@ import argparse
 import json
 import os
 import sys
+import threading
 import time
 
 if __name__ == "__main__":
@@ -93,21 +106,26 @@ def _build_bench(arch: str = "stablelm-3b"):
     return cfg, params
 
 
+def _pct(xs) -> dict:
+    """p50/p95/p99/mean (ms) of a list of latencies in seconds."""
+    if not xs:
+        return {"p50_ms": None, "p95_ms": None, "p99_ms": None,
+                "mean_ms": None}
+    a = np.asarray(xs) * 1e3
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p95_ms": float(np.percentile(a, 95)),
+            "p99_ms": float(np.percentile(a, 99)),
+            "mean_ms": float(a.mean())}
+
+
 def latency_summary(reqs) -> dict:
     """TTFT/TPOT percentiles (ms) over finished requests.
 
     TTFT = submit -> first generated token; TPOT = mean per-token gap over
     the remaining generated tokens (see docs/benchmarks.md).
     """
-    def pct(xs):
-        if not xs:
-            return {"p50_ms": None, "p95_ms": None, "mean_ms": None}
-        a = np.asarray(xs) * 1e3
-        return {"p50_ms": float(np.percentile(a, 50)),
-                "p95_ms": float(np.percentile(a, 95)),
-                "mean_ms": float(a.mean())}
-    return {"ttft": pct([r.ttft for r in reqs if r.ttft is not None]),
-            "tpot": pct([r.tpot for r in reqs if r.tpot is not None]),
+    return {"ttft": _pct([r.ttft for r in reqs if r.ttft is not None]),
+            "tpot": _pct([r.tpot for r in reqs if r.tpot is not None]),
             "n_requests": len(reqs)}
 
 
@@ -480,6 +498,155 @@ def run_scheme_matrix(schemes=("WFE", "Crystalline", "HE", "EBR", "2GEIBR"),
     return out
 
 
+# ---------------------------------------------------- open-loop goodput
+def run_open_loop(arrival_rate: float = None, n_requests: int = 24,
+                  prompt_len: int = 24, new_tokens: int = 8,
+                  chunk_size: int = 8, block_size: int = 4,
+                  batch_frac: float = 0.5, scheme: str = "WFE",
+                  sched_policy: str = "mixed", seed: int = 0,
+                  ttft_slo_mult: float = 10.0, tpot_slo_mult: float = 5.0,
+                  ttft_slo_ms: float = None, tpot_slo_ms: float = None,
+                  build=_build_base) -> dict:
+    """Open-loop Poisson arrivals: goodput-under-SLO + per-token gaps.
+
+    Closed-loop scenarios submit everything up front and measure a
+    DRAINING queue — sustained prompt arrival concurrent with live decode
+    (the load that starves a TTFT-first planner) never occurs.  Here a
+    feeder thread submits ``n_requests`` requests on a Poisson clock
+    (exponential inter-arrivals at ``arrival_rate`` req/s; default = the
+    warmup pass's measured service rate, i.e. AT capacity, so queueing
+    pressure builds stochastically) while the main thread serves.
+    ``batch_frac`` of arrivals are batch-class; the rest interactive.
+
+    A request meets its SLO when TTFT <= target AND TPOT <= target.
+    Targets default to runner-independent MULTIPLES of an unloaded
+    calibration pass (requests served one at a time after warmup):
+    ``ttft_slo_mult`` x unloaded TTFT p50, ``tpot_slo_mult`` x unloaded
+    TPOT p50 — override with absolute ``*_slo_ms``.  Goodput = fraction
+    of finished requests meeting SLO, reported overall and per class.
+    ``gap`` percentiles summarize each request's WORST inter-token gap —
+    the starvation symptom the TPOT mean hides.
+    """
+    cfg, params = build()
+    n_blocks = n_requests * (-(-(prompt_len + new_tokens) // block_size)) + 8
+    engine = ServeEngine(cfg, params, n_blocks=n_blocks,
+                         block_size=block_size, max_batch=4,
+                         scheme=scheme, chunk_size=chunk_size,
+                         sched_policy=sched_policy,
+                         era_freq=8, cleanup_freq=8)
+    tid = engine.pool.register_thread()
+    rng = np.random.default_rng(seed)
+
+    def prompts():
+        return [[1 + (i * 7 + j) % 31 for j in range(prompt_len)]
+                for i in range(n_requests)]
+
+    # warmup: compiles every shape bucket AND measures the service rate
+    t0 = time.perf_counter()
+    for p in prompts():
+        engine.submit(p, new_tokens)
+    engine.run(tid)
+    service_rate = n_requests / (time.perf_counter() - t0)
+    # unloaded calibration: one request at a time — no queueing in TTFT
+    calib = []
+    for p in prompts()[:4]:
+        calib.append(engine.submit(p, new_tokens))
+        engine.run(tid)
+    unloaded = latency_summary(calib)
+    if ttft_slo_ms is None:
+        ttft_slo_ms = ttft_slo_mult * unloaded["ttft"]["p50_ms"]
+    if tpot_slo_ms is None and unloaded["tpot"]["p50_ms"] is not None:
+        tpot_slo_ms = tpot_slo_mult * unloaded["tpot"]["p50_ms"]
+    if arrival_rate is None:
+        arrival_rate = service_rate  # AT capacity: pressure builds
+
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
+    slos = ["batch" if rng.random() < batch_frac else "interactive"
+            for _ in range(n_requests)]
+    reqs: list = []
+    done = threading.Event()
+
+    def feeder():
+        start = time.perf_counter()
+        for p, at, slo in zip(prompts(), arrivals, slos):
+            lag = start + at - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+            reqs.append(engine.submit(p, new_tokens, slo=slo))
+        done.set()
+
+    before = dict(engine.sched.stats)  # counters are cumulative
+    t0 = time.perf_counter()
+    th = threading.Thread(target=feeder, daemon=True)
+    th.start()
+    while (not done.is_set() or engine.sched.pending()
+           or engine.sched.active):
+        if not engine.step(tid):
+            engine.sched.wait_for_work(0.001)
+    th.join()
+    wall = time.perf_counter() - t0
+    engine.drain(tid)
+    after = engine.sched.stats
+    assert all(r.done for r in reqs)
+
+    def meets_slo(r) -> bool:
+        if r.ttft is None or r.ttft * 1e3 > ttft_slo_ms:
+            return False
+        if tpot_slo_ms is not None and r.tpot is not None \
+                and r.tpot * 1e3 > tpot_slo_ms:
+            return False
+        return True
+
+    def goodput(rs) -> float:
+        return sum(meets_slo(r) for r in rs) / len(rs) if rs else None
+
+    inter = [r for r in reqs if r.slo == "interactive"]
+    batch = [r for r in reqs if r.slo == "batch"]
+    out = latency_summary(reqs)
+    out.update({
+        "arrival_rate": float(arrival_rate),
+        "service_rate": float(service_rate),
+        "batch_frac": batch_frac, "sched_policy": sched_policy,
+        "scheme": scheme, "prompt_len": prompt_len,
+        "new_tokens": new_tokens,
+        "ttft_slo_ms": float(ttft_slo_ms),
+        "tpot_slo_ms": None if tpot_slo_ms is None else float(tpot_slo_ms),
+        "unloaded": unloaded,
+        "goodput": goodput(reqs),
+        "goodput_interactive": goodput(inter),
+        "goodput_batch": goodput(batch),
+        "n_interactive": len(inter), "n_batch": len(batch),
+        "gap": _pct([r.max_gap for r in reqs if r.t_last is not None]),
+        "tok_s": n_requests * new_tokens / wall,
+        "mixed_steps": after["mixed_steps"] - before["mixed_steps"],
+        "evictions": after["evictions"] - before["evictions"],
+        "batch_evictions": (after["batch_evictions"]
+                            - before["batch_evictions"]),
+        "deadline_cutoffs": (after["deadline_cutoffs"]
+                             - before["deadline_cutoffs"]),
+    })
+    print(f"\n### Open-loop serving: Poisson arrivals at "
+          f"{arrival_rate:.1f} req/s (service rate {service_rate:.1f}), "
+          f"{n_requests} requests, {batch_frac:.0%} batch-class, "
+          f"policy={sched_policy} ({scheme})")
+    print(f"SLO targets: TTFT <= {ttft_slo_ms:.1f} ms, TPOT <= "
+          + (f"{tpot_slo_ms:.1f} ms" if tpot_slo_ms is not None else "-"))
+
+    def fmt(x, d=1):
+        return f"{x:.{d}f}" if x is not None else "-"
+
+    print(f"goodput {fmt(out['goodput'], 2)} (interactive "
+          f"{fmt(out['goodput_interactive'], 2)} [{len(inter)}], batch "
+          f"{fmt(out['goodput_batch'], 2)} [{len(batch)}]) | "
+          f"TPOT p95 {fmt(out['tpot']['p95_ms'])} p99 "
+          f"{fmt(out['tpot']['p99_ms'])} ms | worst-gap p95 "
+          f"{fmt(out['gap']['p95_ms'])} p99 {fmt(out['gap']['p99_ms'])} ms")
+    print(f"mixed steps {out['mixed_steps']}, evictions "
+          f"{out['evictions']} ({out['batch_evictions']} batch-class), "
+          f"deadline cutoffs {out['deadline_cutoffs']}")
+    return out
+
+
 def run_smoke(chunk_size: int = 8) -> dict:
     """Seconds-scale CI smoke: tiny config, short prompts, same schema."""
     return {
@@ -497,6 +664,9 @@ def run_smoke(chunk_size: int = 8) -> dict:
         "scheme_matrix": run_scheme_matrix(
             schemes=("WFE", "Crystalline"), n_requests=4,
             new_tokens=8, chunk_size=chunk_size),
+        "open_loop": run_open_loop(
+            n_requests=16, prompt_len=16, new_tokens=6,
+            chunk_size=chunk_size, block_size=4),
     }
 
 
@@ -523,9 +693,11 @@ def validate_results(results: dict) -> list:
     if results.get("schema") != "serve_bench/ttft_tpot/v1":
         errors.append(f"bad schema: {results.get('schema')!r}")
     present = [s for s in _TTFT_SCHEMA_MODES if s in results]
-    if not present and "scheme_matrix" not in results:
+    if not present and not any(s in results
+                               for s in ("scheme_matrix", "open_loop")):
         errors.append("no scenario section "
-                      f"({'/'.join(_TTFT_SCHEMA_MODES)}/scheme_matrix)")
+                      f"({'/'.join(_TTFT_SCHEMA_MODES)}/scheme_matrix/"
+                      "open_loop)")
     for section in present:
         sec = results[section]
         for mode in _TTFT_SCHEMA_MODES[section]:
@@ -545,6 +717,23 @@ def validate_results(results: dict) -> list:
         headline = _HEADLINES[section]
         if not isinstance(sec.get(headline), (int, float)):
             errors.append(f"{section}: missing {headline}")
+    if "open_loop" in results:
+        sec = results["open_loop"]
+        for metric in ("ttft", "tpot", "gap"):
+            row = sec.get(metric)
+            if not isinstance(row, dict) or "p99_ms" not in row:
+                errors.append(f"open_loop.{metric}: no p99_ms")
+        # goodput-under-SLO is the scenario's headline: overall and the
+        # interactive split must be present and numeric (batch goodput may
+        # legitimately be None when no batch-class request arrived)
+        for key in ("goodput", "goodput_interactive"):
+            if not isinstance(sec.get(key), (int, float)):
+                errors.append(f"open_loop: missing {key}")
+        if not sec.get("n_interactive"):
+            errors.append("open_loop: no interactive-class requests "
+                          "(the goodput gate would be vacuous)")
+        if not isinstance(sec.get("ttft_slo_ms"), (int, float)):
+            errors.append("open_loop: missing ttft_slo_ms")
     if "scheme_matrix" in results:
         sec = results["scheme_matrix"]
         rows = sec.get("schemes")
@@ -702,6 +891,29 @@ def main(argv=None) -> int:
                     help="shared system-prompt length for --prefix-heavy")
     ap.add_argument("--tail-len", type=int, default=16,
                     help="divergent tail length for --prefix-heavy")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="run the open-loop Poisson-arrival scenario: "
+                         "goodput-under-SLO by class + TPOT/worst-gap "
+                         "p95/p99 (the decode-starvation measurement)")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="open-loop Poisson arrival rate in req/s "
+                         "(default: the warmup pass's measured service "
+                         "rate — serving AT capacity)")
+    ap.add_argument("--batch-frac", type=float, default=0.5,
+                    help="fraction of open-loop arrivals tagged "
+                         "batch-class (admit after / shed before "
+                         "interactive)")
+    ap.add_argument("--sched-policy", default="mixed",
+                    choices=("mixed", "prefill_first"),
+                    help="planner for --open-loop: 'mixed' token budget "
+                         "vs the legacy TTFT-first planner (A/B the "
+                         "starvation fix)")
+    ap.add_argument("--ttft-slo-ms", type=float, default=None,
+                    help="absolute TTFT SLO target (default: 10x the "
+                         "unloaded calibration p50)")
+    ap.add_argument("--tpot-slo-ms", type=float, default=None,
+                    help="absolute TPOT SLO target (default: 5x the "
+                         "unloaded calibration p50)")
     ap.add_argument("--scheme-matrix", action="store_true",
                     help="run the decode-path SMR scheme comparison "
                          "(every --schemes engine on one fixed workload; "
@@ -726,7 +938,12 @@ def main(argv=None) -> int:
               and results["prefix_heavy"]["chunks_saved"] > 0
               and results["decode_heavy"]["tpot_speedup"] > 1.0
               and (savings is None or savings > 0)
-              and all(r["unreclaimed"] == 0 for r in matrix_rows.values()))
+              and all(r["unreclaimed"] == 0 for r in matrix_rows.values())
+              # the starvation fix must hold under open-loop pressure:
+              # some interactive request met its SLO, and the worst
+              # per-token gap stayed measurable (decode kept moving)
+              and results["open_loop"]["goodput_interactive"] > 0
+              and results["open_loop"]["gap"]["p95_ms"] is not None)
     elif args.prefill_heavy:
         results = {"schema": "serve_bench/ttft_tpot/v1"}
         results["prefill_heavy"] = run_prefill_heavy(
@@ -742,6 +959,17 @@ def main(argv=None) -> int:
             new_tokens=args.new_tokens or 4)
         ok = (results["prefix_heavy"]["hit_rate"] > 0
               and results["prefix_heavy"]["chunks_saved"] > 0)
+    elif args.open_loop:
+        results = {"schema": "serve_bench/ttft_tpot/v1"}
+        results["open_loop"] = run_open_loop(
+            arrival_rate=args.arrival_rate,
+            n_requests=args.requests or 24,
+            new_tokens=args.new_tokens or 8,
+            chunk_size=min(args.chunk_size, 8),
+            batch_frac=args.batch_frac,
+            sched_policy=args.sched_policy,
+            ttft_slo_ms=args.ttft_slo_ms, tpot_slo_ms=args.tpot_slo_ms)
+        ok = results["open_loop"]["goodput_interactive"] > 0
     elif args.scheme_matrix:
         results = {"schema": "serve_bench/ttft_tpot/v1"}
         results["scheme_matrix"] = run_scheme_matrix(

@@ -6,23 +6,42 @@ protection are all wait-free-bounded WFE operations, so
 
 * a stalled completion thread cannot block admission (no lock couples them);
 * eviction under pool pressure has bounded latency (``retire`` is
-  wait-free) — the deadline-based batch cutoff below is therefore a real
+  wait-free) — the deadline-based planning cutoff below is therefore a real
   bound, not best-effort;
 * in-flight device steps (dispatched asynchronously, possibly several deep)
   keep their block-table snapshots readable until completion via one era
   reservation per step (``protect_step``).
 
-Chunked-prefill planning: ``tick`` is a token-budget planner emitting TYPED
-step plans — a *decode* batch (one token per decode-phase request, up to
-``max_batch``) or a *prefill* chunk (up to ``chunk_size`` prompt tokens of
-ONE request, with every needed page bulk-allocated up front via
-``BlockTableRef.append_blocks``).  A P-token prompt therefore costs
-``ceil(P / chunk_size)`` device dispatches instead of P decode steps.  The
-era discipline is unchanged and is exactly what makes bulk page access
-cheap: ONE interval reservation per step protects however many blocks the
-chunk touches (the paper's amortize-protection-over-many-accesses argument;
-cf. DEBRA / Crystalline).  Prefill chunks are planned before decode batches
-(TTFT-first); both kinds draw from the same ``max_inflight`` slot budget.
+Mixed-batch token-budget planning (the decode-starvation fix): each
+``tick`` gets ``token_budget`` tokens and fills them DECODE-FIRST — one
+token per decode-phase request (decode progress is the starvation victim
+under sustained prompt arrival), then the remainder goes to ONE prefill
+chunk of the oldest prefill-phase request.  Both ride in a single
+``StepPlan(kind="mixed")`` device dispatch: the chunked paged kernel
+already scores C ragged tokens with per-row positions, so decode rows are
+simply rows with ``chunk_lens == 1``.  A tick with only one kind of work
+degenerates to a pure ``decode`` or ``prefill`` plan.  The era discipline
+is unchanged and is exactly what makes the mixed batch cheap: ONE interval
+reservation per step protects every page the batch touches — decode rows
+AND the chunk (the paper's amortize-protection-over-many-accesses
+argument; cf. DEBRA / Crystalline, which budget reclamation work per
+operation the same way this planner budgets scheduling work per tick).
+The legacy TTFT-first planner (prefill strictly before decode) is kept as
+``policy="prefill_first"`` for A/B measurement — the starvation reproducer
+in tests/test_scheduler_slo.py fails against it by construction.
+
+SLO classes and admission control: ``submit`` takes ``slo="interactive"``
+or ``"batch"``.  Admission drains each shard's interactive intake queue
+first (batch requests are DEFERRED behind any interactive backlog), and
+``max_batch`` is a HARD active-set cap per shard.  Under pool pressure the
+shedding ladder runs: (1) drop an LRU prefix-cache entry (free — redo no
+work), (2) preempt the newest batch-class request, regardless of admission
+order (batch can never preempt interactive back, so no ping-pong
+livelock), (3) same-class LIFO preemption bounded to requests admitted
+AFTER the requester (the PR-3 livelock fix).  An evicted request rejoins
+its intake queue at the HEAD (``appendleft``): its TTFT is still clocked
+from the original submit, so falling behind brand-new arrivals would
+balloon it unfairly.
 
 Multi-worker discipline (the sharded serving runtime): several worker
 threads drive ``tick``/``complete`` concurrently.  Scheduling state (the
@@ -50,13 +69,18 @@ import numpy as np
 from .block_pool import PoolExhausted
 from .block_table import BlockTableRef
 
-__all__ = ["Request", "StepPlan", "Scheduler"]
+__all__ = ["Request", "StepPlan", "Scheduler", "SLO_CLASSES"]
 
 #: every per-worker stats dict carries these keys (merged by ``stats``)
-STAT_KEYS = ("admitted", "completed", "evictions", "steps",
-             "deadline_cutoffs", "reclaimed", "prefill_chunks",
-             "prefill_tokens", "prefix_lookups", "prefix_hits",
-             "prefix_hit_tokens", "prefix_evictions")
+STAT_KEYS = ("admitted", "completed", "evictions", "batch_evictions",
+             "steps", "mixed_steps", "deadline_cutoffs", "reclaimed",
+             "prefill_chunks", "prefill_tokens", "prefix_lookups",
+             "prefix_hits", "prefix_hit_tokens", "prefix_evictions")
+
+#: per-request SLO classes: ``interactive`` requests are admitted first and
+#: never preempted on behalf of ``batch`` requests; ``batch`` requests are
+#: deferred behind any interactive backlog and shed first under pressure
+SLO_CLASSES = ("interactive", "batch")
 
 
 @dataclass
@@ -71,15 +95,18 @@ class Request:
     evictions: int = 0
     inflight: bool = False  # a device step for this request is outstanding
     shard: int = 0  # pool/device shard this request's pages live in
+    slo: str = "interactive"  # SLO class: "interactive" | "batch"
     # one prefix-cache lookup per admission: a pressure-starved request
     # must not re-walk the deepest-match keys every tick (reset on
     # eviction rewind — the re-run is cache-eligible again)
     prefix_checked: bool = False
     # latency stamps (time.monotonic): TTFT = t_first - t_submit,
-    # TPOT = (t_last - t_first) / (len(generated) - 1)
+    # TPOT = (t_last - t_first) / (len(generated) - 1); max_gap is the
+    # WORST inter-token gap — the starvation symptom TPOT means hide
     t_submit: float = 0.0
     t_first: Optional[float] = None
     t_last: Optional[float] = None
+    max_gap: float = 0.0
 
     @property
     def phase(self) -> str:
@@ -125,24 +152,32 @@ class StepPlan:
     are (B,), tables (B, nblk).  ``kind == "prefill"``: a chunk of
     ``n_tokens`` prompt tokens of ONE request — tokens/positions are
     (n_tokens,), tables (1, nblk), lengths (1,) = context INCLUDING the
-    chunk.  Either way the plan holds exactly one era-reservation slot.
+    chunk.  ``kind == "mixed"``: ``n_decode`` decode rows plus ONE prefill
+    chunk row (always last) in a single dispatch — tokens/positions are
+    (B, C) with C the chunk length, ``chunk_lens`` (B,) gives each row's
+    valid tokens (1 for decode rows), and ``n_tokens`` is the total token
+    budget the plan spends.  Either way the plan holds exactly one
+    era-reservation slot.
     """
 
     slot: int  # era-reservation slot guarding this step
     requests: List[Request]
-    tokens: np.ndarray  # decode: (B,) i32; prefill: (C,) i32
-    positions: np.ndarray  # decode: (B,) i32; prefill: (C,) i32
+    tokens: np.ndarray  # decode: (B,) i32; prefill: (C,); mixed: (B, C)
+    positions: np.ndarray  # decode: (B,) i32; prefill: (C,); mixed: (B, C)
     tables: np.ndarray  # (B, nblk) int32, padded with 0 (global slot ids)
     lengths: np.ndarray  # (B,) i32 — context length INCLUDING this step
     shard: int = 0  # every request in this plan lives in this shard
-    kind: str = "decode"  # "decode" | "prefill"
-    n_tokens: int = 1  # prefill chunk length (1 per request for decode)
+    kind: str = "decode"  # "decode" | "prefill" | "mixed"
+    n_tokens: int = 1  # tokens this plan spends (chunk length for prefill)
+    n_decode: int = 0  # mixed: leading decode rows (prefill row is last)
+    chunk_lens: Optional[np.ndarray] = None  # mixed: (B,) valid tokens/row
 
 
 class Scheduler:
     def __init__(self, pool, *, block_size: int, max_batch: int,
                  max_inflight: int = 4, deadline_ms: float = 50.0,
-                 chunk_size: int = 16, prefix_cache=None):
+                 chunk_size: int = 16, token_budget: Optional[int] = None,
+                 policy: str = "mixed", prefix_cache=None):
         self.pool = pool
         self.block_size = block_size
         # refcounted prefix cache (blocks/prefix_cache.py), or None: the
@@ -157,10 +192,24 @@ class Scheduler:
         if chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
         self.chunk_size = chunk_size  # per-step prefill token budget
+        # per-tick token budget: decode rows spend 1 each, the remainder
+        # funds one prefill chunk.  The default fits a full decode batch
+        # PLUS a full chunk, so neither phase can crowd the other out.
+        if token_budget is None:
+            token_budget = max_batch + chunk_size
+        if token_budget < 1:
+            raise ValueError("token_budget must be >= 1")
+        self.token_budget = token_budget
+        if policy not in ("mixed", "prefill_first"):
+            raise ValueError(f"policy {policy!r}: expected 'mixed' or "
+                             "'prefill_first'")
+        self.policy = policy
         # request-level shard router: round-robin assignment at submit,
-        # one intake queue per shard (n_shards == 1 for unsharded pools)
+        # one intake queue PER SLO CLASS per shard (interactive drained
+        # first; n_shards == 1 for unsharded pools)
         self.n_shards = getattr(pool, "n_shards", 1)
-        self.queues: List[deque] = [deque() for _ in range(self.n_shards)]
+        self.queues: List[Dict[str, deque]] = [
+            {c: deque() for c in SLO_CLASSES} for _ in range(self.n_shards)]
         self.active: List[Request] = []
         self._qlock = threading.Lock()
         # one lock for planning/accounting; the device step runs outside it
@@ -194,22 +243,26 @@ class Scheduler:
     # --------------------------------------------------------------- intake
     @property
     def queue(self) -> List[Request]:
-        """Flat SNAPSHOT of the per-shard intake queues, taken under the
-        queue lock — iterating the live deques while submit()/_evict()
-        mutate them raises RuntimeError."""
+        """Flat SNAPSHOT of the per-shard intake queues (interactive before
+        batch per shard), taken under the queue lock — iterating the live
+        deques while submit()/_evict() mutate them raises RuntimeError."""
         with self._qlock:
-            return [r for q in self.queues for r in q]
+            return [r for q in self.queues for c in SLO_CLASSES
+                    for r in q[c]]
 
     def pending(self) -> int:
         with self._qlock:
-            return sum(len(q) for q in self.queues)
+            return sum(len(q[c]) for q in self.queues for c in SLO_CLASSES)
 
-    def submit(self, prompt: List[int], max_new_tokens: int) -> Request:
-        req = Request(next(self._rid), list(prompt), max_new_tokens)
+    def submit(self, prompt: List[int], max_new_tokens: int,
+               slo: str = "interactive") -> Request:
+        if slo not in SLO_CLASSES:
+            raise ValueError(f"slo {slo!r}: expected one of {SLO_CLASSES}")
+        req = Request(next(self._rid), list(prompt), max_new_tokens, slo=slo)
         req.t_submit = time.monotonic()
         req.shard = req.rid % self.n_shards  # round-robin shard router
         with self._qlock:
-            self.queues[req.shard].append(req)
+            self.queues[req.shard][slo].append(req)
         with self._work:
             self._work.notify_all()
         return req
@@ -237,26 +290,39 @@ class Scheduler:
 
     def _tick_locked(self, tid: int, shard: int) -> Optional[StepPlan]:
         stats = self._wstats(tid)
-        t0 = time.monotonic()
-        deadline = t0 + self.deadline_ms / 1e3
+        deadline = time.monotonic() + self.deadline_ms / 1e3
+        self._admit(tid, shard, deadline, stats)
+        if not self.active:
+            return None
+        if not self._slots:
+            return None  # all in-flight slots busy; caller completes first
+        if self.policy == "prefill_first":
+            return self._tick_prefill_first(tid, shard, deadline, stats)
+        return self._tick_mixed(tid, shard, deadline, stats)
 
-        # admit (into this shard's active set)
-        def shard_load():
-            n = inflight = 0
-            for r in self.active:
-                if r.shard == shard:
-                    n += 1
-                    inflight += r.inflight
-            return n, inflight
+    def _admit(self, tid: int, shard: int, deadline: float,
+               stats: Dict[str, int]) -> None:
+        """Admit into this shard's active set up to the HARD ``max_batch``
+        cap, interactive intake first (batch requests are deferred behind
+        any interactive backlog — the admission half of the SLO ladder).
 
+        ``max_batch`` bounds the ACTIVE SET, not just the per-step batch:
+        letting the set grow with the in-flight count (the old
+        ``max_batch + n_inflight`` condition) ratcheted pool pressure and
+        eviction churn up with pipeline depth.
+        """
         while True:
-            n_active, n_inflight = shard_load()
-            if n_active >= self.max_batch + n_inflight:
+            n_active = sum(1 for r in self.active if r.shard == shard)
+            if n_active >= self.max_batch:
                 break
             with self._qlock:
-                if not self.queues[shard]:
+                q = self.queues[shard]
+                if q["interactive"]:
+                    req = q["interactive"].popleft()
+                elif q["batch"]:
+                    req = q["batch"].popleft()
+                else:
                     break
-                req = self.queues[shard].popleft()
             if req.table is None:
                 req.table = BlockTableRef(
                     self.pool, tid,
@@ -269,44 +335,108 @@ class Scheduler:
                 stats["deadline_cutoffs"] += 1
                 break
 
-        if not self.active:
+    # ------------------------------------------------------------ planners
+    def _tick_mixed(self, tid: int, shard: int, deadline: float,
+                    stats: Dict[str, int]) -> Optional[StepPlan]:
+        """The token-budget planner: decode rows first, then one prefill
+        chunk from the remainder — one plan, one dispatch, one reservation.
+        """
+        budget = self.token_budget
+        runnable = self._gather_decode(tid, shard, deadline, stats,
+                                       cap=min(self.max_batch, budget))
+        budget -= len(runnable)
+        pre, n = None, 0
+        if budget > 0:
+            # oldest prefill-phase request gets the remainder; a candidate
+            # that cannot fund even one token (pool exhausted, no victim)
+            # yields to the next one
+            for req in list(self.active):
+                if req.state != "active" or req.inflight \
+                        or req.shard != shard or req.phase != "prefill":
+                    continue
+                n = self._alloc_prefill_chunk(req, tid, shard, deadline,
+                                              stats, budget, runnable)
+                if n > 0:
+                    pre = req
+                    break
+        if not runnable and pre is None:
             return None
-        if not self._slots:
-            return None  # all in-flight slots busy; caller completes first
+        slot = self._slots.popleft()
+        # ORDER MATTERS (Lemma 4 discipline): publish the era reservation
+        # FIRST, then snapshot tables — everything read after the publish
+        # is covered by the reservation's era.  A sharded plan reserves
+        # only in its own shard (all its blocks live there).
+        self.pool.protect_step(slot, tid, shard=shard)
+        if pre is None:
+            return self._build_decode_plan(runnable, slot, shard, stats)
+        if not runnable:
+            return self._build_prefill_plan(pre, n, slot, shard, stats)
+        return self._build_mixed_plan(runnable, pre, n, slot, shard, stats)
 
-        # prefill first (TTFT-priority): the oldest admitted request still
-        # materializing its prompt gets a chunk of up to ``chunk_size``
-        # tokens.  FCFS over the active list keeps the LIFO-preemption
-        # invariant: the oldest prefill makes monotonic progress.
+    def _tick_prefill_first(self, tid: int, shard: int, deadline: float,
+                            stats: Dict[str, int]) -> Optional[StepPlan]:
+        """The legacy TTFT-first planner (the seed behavior, kept for A/B):
+        prefill strictly before decode — under sustained prompt arrival
+        decode-phase requests starve (see tests/test_scheduler_slo.py)."""
         for req in list(self.active):
-            if req.state != "active" or req.inflight or req.shard != shard:
+            if req.state != "active" or req.inflight or req.shard != shard \
+                    or req.phase != "prefill":
                 continue
-            if req.phase != "prefill":
-                continue
-            plan = self._plan_prefill(req, tid, shard, stats)
-            if plan is not None:
-                return plan
+            n = self._alloc_prefill_chunk(req, tid, shard, deadline, stats,
+                                          self.chunk_size, None)
+            if n > 0:
+                slot = self._slots.popleft()
+                self.pool.protect_step(slot, tid, shard=shard)
+                return self._build_prefill_plan(req, n, slot, shard, stats)
             # no pages for even one token of this request: try the next
             # candidate (or fall through to a decode batch)
+        runnable = self._gather_decode(tid, shard, deadline, stats,
+                                       cap=self.max_batch)
+        if not runnable:
+            return None
+        slot = self._slots.popleft()
+        self.pool.protect_step(slot, tid, shard=shard)
+        return self._build_decode_plan(runnable, slot, shard, stats)
 
-        # decode batch: one token per decode-phase request.  Priority is
-        # admission order (FCFS): under pool pressure the NEWEST request is
-        # preempted (vLLM-style LIFO preemption), so the oldest request
-        # makes monotonic progress — no eviction livelock.  Requests whose
-        # previous step is still in flight (another worker's) are skipped;
-        # they rejoin once that worker completes them.
+    def _gather_decode(self, tid: int, shard: int, deadline: float,
+                       stats: Dict[str, int], cap: int) -> List[Request]:
+        """Collect up to ``cap`` decode-phase rows, allocating a fresh
+        block where a request crosses a block boundary.  Priority is
+        admission order (FCFS): under pool pressure the shedding ladder
+        runs (cache entry, then newest batch-class request, then same-class
+        LIFO), so the oldest request makes monotonic progress — no
+        eviction livelock.  Requests whose previous step is still in
+        flight (another worker's) are skipped; they rejoin once that
+        worker completes them.
+
+        The planning deadline covers the WHOLE phase: once at least one
+        row is gathered, crossing the deadline cuts the batch (run what we
+        have), and the per-request eviction ladder stops one step past it
+        — planning latency stays bounded even under heavy pool pressure,
+        while a tick under pressure still makes at least one unit of
+        progress (one ladder step) so a zero deadline cannot livelock.
+        """
         runnable: List[Request] = []
         for req in list(self.active):
             if req.state != "active" or req.inflight or req.shard != shard \
                     or req.phase != "decode":
                 continue  # evicted earlier in this loop, being stepped,
                 # pinned to a different shard's device chain, or still
-                # materializing its prompt (prefill planner's job)
-            if len(runnable) >= self.max_batch:
+                # materializing its prompt (the prefill planner's job)
+            if len(runnable) >= cap:
+                break
+            if runnable and time.monotonic() > deadline:
+                # straggler mitigation: cut the batch, run what we have
+                stats["deadline_cutoffs"] += 1
                 break
             if req.length % self.block_size == 0:  # needs a fresh block
                 got = False
+                attempts = 0
                 while not got:
+                    if attempts and time.monotonic() > deadline:
+                        stats["deadline_cutoffs"] += 1
+                        break  # bounded: give up on this row this tick
+                    attempts += 1
                     try:
                         req.table.append_block(tid)
                         got = True
@@ -322,33 +452,7 @@ class Scheduler:
                 if not got:
                     continue
             runnable.append(req)
-        if not runnable:
-            return None
-
-        slot = self._slots.popleft()
-        # ORDER MATTERS (Lemma 4 discipline): publish the era reservation
-        # FIRST, then snapshot tables — everything read after the publish is
-        # covered by the reservation's era.  A sharded plan reserves only in
-        # its own shard (all its blocks live there).
-        self.pool.protect_step(slot, tid, shard=shard)
-
-        b = len(runnable)
-        nblk = max(len(r.table) for r in runnable)
-        tables = np.zeros((b, nblk), np.int32)
-        tokens = np.zeros((b,), np.int32)
-        positions = np.zeros((b,), np.int32)
-        lengths = np.zeros((b,), np.int32)
-        for i, req in enumerate(runnable):
-            req.inflight = True
-            snap = req.table.current()  # protected snapshot
-            ids = snap.block_ids
-            tables[i, : len(ids)] = ids
-            tokens[i] = req.next_token
-            positions[i] = req.length
-            lengths[i] = req.length + 1
-        stats["steps"] += 1
-        return StepPlan(slot, runnable, tokens, positions, tables, lengths,
-                        shard=shard)
+        return runnable
 
     def _evict_cache_entry(self, tid: int, shard: int,
                            stats: Dict[str, int]) -> bool:
@@ -390,22 +494,39 @@ class Scheduler:
         stats["prefix_hits"] += 1
         stats["prefix_hit_tokens"] += req.length
 
-    def _plan_prefill(self, req: Request, tid: int, shard: int,
-                      stats: Dict[str, int]) -> Optional[StepPlan]:
-        """Plan one prefill chunk for ``req`` (up to the token budget).
-
-        Bulk-allocates every page the chunk needs in ONE table version
+    def _alloc_prefill_chunk(self, req: Request, tid: int, shard: int,
+                             deadline: float, stats: Dict[str, int],
+                             budget: int,
+                             runnable: Optional[List[Request]]) -> int:
+        """Fund one prefill chunk for ``req``: consult the prefix cache,
+        size the chunk to ``min(chunk_size, budget, prompt remainder)``,
+        and bulk-allocate every page it needs in ONE table version
         (``append_blocks`` → ``alloc_blocks``, atomic under pressure).
-        Under exhaustion: evict a prefix-cache entry, else LIFO-evict a
-        request, retry; with no victim left, shrink the chunk to the
-        capacity of pages the request already owns; with zero capacity,
-        yield (None) so the tick can run something else.
+
+        Under exhaustion the shedding ladder runs (cache entry → newest
+        batch request → same-class LIFO victim); with no victim left, the
+        chunk shrinks to the capacity of pages the request already owns.
+        Crossing the planning deadline stops the ladder one step past it
+        and runs the shrunken chunk.  A victim already gathered as a
+        decode row this tick is dropped from ``runnable``.  Returns the
+        chunk length (0 = nothing fundable this tick).
         """
         self._consult_prefix_cache(req, tid, shard, stats)
         ctx = req.length
-        n = min(self.chunk_size, len(req.prompt) - ctx)
+        n = min(self.chunk_size, budget, len(req.prompt) - ctx)
+        if n <= 0:
+            return 0
+
+        def owned() -> int:  # tokens fundable by already-owned pages
+            return min(n, len(req.table) * self.block_size - ctx)
+
         need = -(-(ctx + n) // self.block_size) - len(req.table)
+        attempts = 0
         while need > 0:
+            if attempts and time.monotonic() > deadline:
+                stats["deadline_cutoffs"] += 1
+                return max(owned(), 0)
+            attempts += 1
             try:
                 req.table.append_blocks(tid, need)
                 need = 0
@@ -414,21 +535,42 @@ class Scheduler:
                     continue  # cache-only blocks freed; retry the alloc
                 victim = self._pick_victim(exclude=req, shard=shard)
                 if victim is None:
-                    # newest non-inflight request is us: shrink the chunk
-                    # to the pages already owned and run that much
-                    n = min(n, len(req.table) * self.block_size - ctx)
+                    # newest evictable request is us: shrink the chunk to
+                    # the pages already owned and run that much
+                    n = owned()
                     if n <= 0:
-                        return None
+                        return 0
                     need = 0
                 else:
+                    if runnable is not None and victim in runnable:
+                        runnable.remove(victim)
                     self._evict(victim, tid)
+        return n
 
-        slot = self._slots.popleft()
-        # same Lemma-4 discipline as decode: ONE reservation published
-        # BEFORE the table snapshot covers every page the chunk touches —
-        # bulk page access at O(1) protection cost (the interval property)
-        self.pool.protect_step(slot, tid, shard=shard)
+    # ------------------------------------------------------- plan builders
+    def _build_decode_plan(self, runnable: List[Request], slot: int,
+                           shard: int, stats: Dict[str, int]) -> StepPlan:
+        b = len(runnable)
+        nblk = max(len(r.table) for r in runnable)
+        tables = np.zeros((b, nblk), np.int32)
+        tokens = np.zeros((b,), np.int32)
+        positions = np.zeros((b,), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        for i, req in enumerate(runnable):
+            req.inflight = True
+            snap = req.table.current()  # protected snapshot
+            ids = snap.block_ids
+            tables[i, : len(ids)] = ids
+            tokens[i] = req.next_token
+            positions[i] = req.length
+            lengths[i] = req.length + 1
+        stats["steps"] += 1
+        return StepPlan(slot, runnable, tokens, positions, tables, lengths,
+                        shard=shard)
 
+    def _build_prefill_plan(self, req: Request, n: int, slot: int,
+                            shard: int, stats: Dict[str, int]) -> StepPlan:
+        ctx = req.length
         req.inflight = True
         snap = req.table.current()  # protected snapshot
         ids = snap.block_ids
@@ -443,40 +585,74 @@ class Scheduler:
         return StepPlan(slot, [req], tokens, positions, tables, lengths,
                         shard=shard, kind="prefill", n_tokens=n)
 
+    def _build_mixed_plan(self, runnable: List[Request], pre: Request,
+                          n: int, slot: int, shard: int,
+                          stats: Dict[str, int]) -> StepPlan:
+        """Decode rows + one prefill chunk row (last) in ONE dispatch.
+
+        Row layout is the chunked kernel's ragged form: (B, C) tokens and
+        absolute positions with per-row ``chunk_lens`` — decode rows carry
+        1 valid token (their columns past 0 clamp to the row's position,
+        so padded columns stay masked to materialized pages).
+        """
+        rows = runnable + [pre]
+        b = len(rows)
+        nblk = max(len(r.table) for r in rows)
+        tables = np.zeros((b, nblk), np.int32)
+        tokens = np.zeros((b, n), np.int32)
+        positions = np.zeros((b, n), np.int32)
+        chunk_lens = np.zeros((b,), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        for i, req in enumerate(runnable):
+            req.inflight = True
+            ids = req.table.current().block_ids  # protected snapshot
+            tables[i, : len(ids)] = ids
+            tokens[i, 0] = req.next_token
+            positions[i, :] = req.length  # pad cols clamp to the one pos
+            chunk_lens[i] = 1
+            lengths[i] = req.length + 1
+        ctx = pre.length
+        pre.inflight = True
+        ids = pre.table.current().block_ids  # protected snapshot
+        tables[b - 1, : len(ids)] = ids
+        tokens[b - 1, :] = pre.prompt[ctx:ctx + n]
+        positions[b - 1, :] = np.arange(ctx, ctx + n, dtype=np.int32)
+        chunk_lens[b - 1] = n
+        lengths[b - 1] = ctx + n
+        stats["steps"] += 1
+        stats["mixed_steps"] += 1
+        stats["prefill_chunks"] += 1
+        stats["prefill_tokens"] += n
+        return StepPlan(slot, rows, tokens, positions, tables, lengths,
+                        shard=shard, kind="mixed",
+                        n_tokens=len(runnable) + n,
+                        n_decode=len(runnable), chunk_lens=chunk_lens)
+
     # --------------------------------------------------------------- complete
     def complete(self, plan: StepPlan, sampled: np.ndarray, tid: int) -> None:
         """Account one finished device step; release its reservation.
 
-        For a prefill plan ``sampled`` holds ONE token — the argmax of the
-        chunk's last valid position — consumed only by the chunk that
-        materializes the final prompt token (it IS the first generated
-        token); earlier chunks' samples are discarded.
+        ``sampled`` holds one token per plan ROW — for prefill rows it is
+        the argmax of the chunk's last valid position, consumed only by
+        the chunk that materializes the final prompt token (it IS the
+        first generated token); earlier chunks' samples are discarded.
         """
         stats = self._wstats(tid)
         with self._lock:
             if plan.kind == "prefill":
-                req = plan.requests[0]
-                req.inflight = False
-                req.length += plan.n_tokens
-                if req.length >= len(req.prompt):
-                    if self.prefix_cache is not None:
-                        # register every block-aligned prefix of the now
-                        # fully-materialized prompt — BEFORE the request
-                        # can finish and release its references (the
-                        # cache increments sharer counts while they are
-                        # provably nonzero)
-                        self.prefix_cache.insert(
-                            req.prompt, req.table.current().blocks,
-                            tid, shard=req.shard)
-                    self._append_token(req, int(sampled[0]), tid, stats)
+                self._complete_prefill(plan.requests[0], plan.n_tokens,
+                                       int(sampled[0]), tid, stats)
+            elif plan.kind == "mixed":
+                for i, req in enumerate(plan.requests):
+                    if i < plan.n_decode:
+                        self._complete_decode(req, int(sampled[i]), tid,
+                                              stats)
+                    else:
+                        self._complete_prefill(req, int(plan.chunk_lens[i]),
+                                               int(sampled[i]), tid, stats)
             else:
                 for req, tok in zip(plan.requests, sampled):
-                    req.inflight = False
-                    req.length += 1
-                    # the step that consumed the last prompt token produces
-                    # the first generated token
-                    if req.length >= len(req.prompt):
-                        self._append_token(req, int(tok), tid, stats)
+                    self._complete_decode(req, int(tok), tid, stats)
             self.pool.release_step(plan.slot, tid, shard=plan.shard)
             self._slots.append(plan.slot)
             self._work.notify_all()  # freed a slot + un-inflighted requests
@@ -492,14 +668,43 @@ class Scheduler:
         # plan.shard, so one shard's drain covers them.
         stats["reclaimed"] += self.pool.cleanup(tid, shard=plan.shard)
 
+    def _complete_decode(self, req: Request, tok: int, tid: int,
+                         stats: Dict[str, int]) -> None:
+        req.inflight = False
+        req.length += 1
+        # the step that consumed the last prompt token produces the first
+        # generated token
+        if req.length >= len(req.prompt):
+            self._append_token(req, tok, tid, stats)
+
+    def _complete_prefill(self, req: Request, n: int, tok: int, tid: int,
+                          stats: Dict[str, int]) -> None:
+        req.inflight = False
+        req.length += n
+        if req.length >= len(req.prompt):
+            if self.prefix_cache is not None:
+                # register every block-aligned prefix of the now fully-
+                # materialized prompt — BEFORE the request can finish and
+                # release its references (the cache increments sharer
+                # counts while they are provably nonzero)
+                self.prefix_cache.insert(
+                    req.prompt, req.table.current().blocks,
+                    tid, shard=req.shard)
+            self._append_token(req, tok, tid, stats)
+
     def _append_token(self, req: Request, tok: int, tid: int,
                       stats: Dict[str, int]) -> None:
         """Deliver one generated token (and retire the request when done).
         Caller holds the scheduler lock."""
         req.generated.append(tok)
-        req.t_last = time.monotonic()
+        now = time.monotonic()
+        if req.t_last is not None:
+            # worst inter-token gap: the decode-starvation symptom the
+            # TPOT *mean* hides (many fast tokens average one stall away)
+            req.max_gap = max(req.max_gap, now - req.t_last)
+        req.t_last = now
         if req.t_first is None:
-            req.t_first = req.t_last
+            req.t_first = now
         if req.done:
             req.state = "done"
             req.table.release_all(tid)
@@ -509,13 +714,20 @@ class Scheduler:
     # --------------------------------------------------------------- evict
     def _pick_victim(self, exclude: Request,
                      shard: Optional[int] = None) -> Optional[Request]:
-        """LIFO preemption: the newest admission yields (vLLM policy).
+        """The preemption half of the shedding ladder (the cache rung runs
+        in ``_evict_cache_entry`` before this is consulted).
 
-        Only requests admitted AFTER ``exclude`` are candidates — blocks
-        flow strictly from newer to older requests, so the oldest request
-        makes monotonic progress and the newest can never steal (it
-        shrinks its chunk or waits instead).  Without this bound two
-        prefill-phase requests under pressure evict each other forever.
+        Rung 2 — priority shedding: an INTERACTIVE requester preempts the
+        newest batch-class request first, REGARDLESS of admission order.
+        Safe against ping-pong livelock because the inverse move does not
+        exist: a batch request can never preempt an interactive one.
+
+        Rung 3 — same-class LIFO (vLLM policy): only requests admitted
+        AFTER ``exclude`` are candidates — blocks flow strictly from newer
+        to older requests, so the oldest request makes monotonic progress
+        and the newest can never steal (it shrinks its chunk or waits
+        instead).  Without this bound two prefill-phase requests under
+        pressure evict each other forever.
 
         Never preempts a request whose step is in flight — its block-table
         snapshot is feeding a device step right now (the era reservation
@@ -524,12 +736,23 @@ class Scheduler:
         must live in the pressured shard — evicting elsewhere frees the
         wrong slot range.
         """
+        def evictable(req: Request) -> bool:
+            return (req.state == "active" and not req.inflight
+                    and (shard is None or req.shard == shard))
+
+        if exclude.slo == "interactive":
+            for req in reversed(self.active):
+                if req is not exclude and req.slo == "batch" \
+                        and evictable(req):
+                    return req
         for req in reversed(self.active):
             if req is exclude:
                 break  # everything earlier in the list is OLDER: off-limits
-            if shard is not None and req.shard != shard:
+            # a batch requester may only preempt batch-class requests —
+            # interactive work is never shed on behalf of batch work
+            if exclude.slo == "batch" and req.slo != "batch":
                 continue
-            if req.state == "active" and not req.inflight:
+            if evictable(req):
                 return req
         return None
 
@@ -542,14 +765,21 @@ class Scheduler:
         # t_first would understate TTFT and fold the eviction gap into TPOT)
         req.t_first = None
         req.t_last = None
+        req.max_gap = 0.0
         req.state = "queued"
         req.prefix_checked = False  # the re-run may hit the cache anew
         req.evictions += 1
         self.active.remove(req)
         with self._qlock:
-            self.queues[req.shard].append(req)
+            # HEAD of the intake queue, not the tail: TTFT is still
+            # clocked from the original submit, so falling behind
+            # brand-new arrivals would balloon it unfairly — a preempted
+            # request re-admits before anything submitted after it
+            self.queues[req.shard][req.slo].appendleft(req)
         stats = self._wstats(tid)
         stats["evictions"] += 1
+        if req.slo == "batch":
+            stats["batch_evictions"] += 1
         # scoped to the pressured shard: _evict runs under the scheduler
         # lock, so a full cross-shard fan-out here would serialize every
         # other worker's planning behind reclamation

@@ -15,6 +15,13 @@ Chunked prefill (a P-token prompt costs ceil(P/C) device steps; reports
 TTFT/TPOT — see docs/benchmarks.md for definitions):
 
   PYTHONPATH=src python -m repro.launch.serve --chunk-size 32
+
+Mixed-batch token-budget planning with SLO classes (decode rows fund
+first each tick; batch-class requests admit after — and shed before —
+interactive ones; see docs/serving.md §Scheduling policy):
+
+  PYTHONPATH=src python -m repro.launch.serve --slo mix --token-budget 24
+  PYTHONPATH=src python -m repro.launch.serve --sched-policy prefill_first
 """
 
 from __future__ import annotations
@@ -60,6 +67,22 @@ def main(argv=None) -> int:
                          "compile per request lifetime, dead slots skipped "
                          "by the length-bounded kernel), 'pow2' is the "
                          "legacy current-width ladder")
+    ap.add_argument("--sched-policy", default="mixed",
+                    choices=("mixed", "prefill_first"),
+                    help="'mixed' = token-budget planner (decode rows "
+                         "first, remainder funds one prefill chunk, one "
+                         "dispatch); 'prefill_first' = legacy TTFT-first "
+                         "planner (decode starves under sustained prompt "
+                         "arrival — kept for A/B)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="tokens per mixed tick (default: max_batch + "
+                         "chunk_size — a full decode batch plus a full "
+                         "prefill chunk)")
+    ap.add_argument("--slo", default="interactive",
+                    choices=("interactive", "batch", "mix"),
+                    help="SLO class for submitted requests ('mix' tags "
+                         "every other request batch-class: batch admits "
+                         "after — and sheds before — interactive)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable the refcounted prefix cache (prompts "
                          "sharing a block-aligned prefix alias the same "
@@ -84,13 +107,17 @@ def main(argv=None) -> int:
                          max_threads=max(8, args.workers + 1),
                          max_inflight=max(4, args.workers),
                          chunk_size=args.chunk_size,
+                         token_budget=args.token_budget,
+                         sched_policy=args.sched_policy,
                          bucket_policy=args.bucket_policy,
                          prefix_caching=not args.no_prefix_cache,
                          **smr_kwargs)
     reqs = []
     for i in range(args.requests):
         prompt = [(3 * i + j) % cfg.vocab_size for j in range(1 + i % 6)]
-        reqs.append(engine.submit(prompt, args.new_tokens))
+        slo = ("batch" if i % 2 else "interactive") \
+            if args.slo == "mix" else args.slo
+        reqs.append(engine.submit(prompt, args.new_tokens, slo=slo))
     t0 = time.time()
     if args.workers > 1:
         runtime = ServeRuntime(engine, n_workers=args.workers)

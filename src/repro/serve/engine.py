@@ -16,6 +16,19 @@ table-width buckets, and both plan kinds share the per-shard device locks
 — multi-worker pipelining overlaps a prefill chunk on one shard with
 decode batches on others.
 
+Mixed batches (``sched_policy="mixed"``, the default): the scheduler's
+token-budget planner packs decode rows AND one prefill chunk into a
+single ``StepPlan(kind="mixed")``, executed as ONE dispatch of the
+chunked kernel — decode rows are rows with ``chunk_lens == 1``, the
+chunk rides in the last row.  This is the decode-starvation fix: under
+sustained prompt arrival the legacy TTFT-first planner
+(``sched_policy="prefill_first"``) plans prefill chunks back-to-back and
+live decode requests stall unboundedly; the mixed batch funds decode
+first every tick, bounding per-token gaps.  ``submit`` takes a per-
+request SLO class (``slo="interactive" | "batch"``): interactive intake
+admits first, and under pool pressure batch-class requests are shed
+before any interactive request is preempted.
+
 Shape buckets (``bucket_policy``): every step pads its block table to a
 width bucket so XLA compiles once per bucket.  The default ``"maxlen"``
 buckets on the batch's FINAL width (known at admission from prompt +
@@ -136,6 +149,8 @@ class ServeEngine:
                  max_threads: int = 8, n_shards: int = 1,
                  max_inflight: int = 4, merge_freq: int = 1,
                  pad_shapes: bool = True, chunk_size: int = 16,
+                 token_budget: Optional[int] = None,
+                 sched_policy: str = "mixed",
                  bucket_policy: str = "maxlen",
                  prefix_caching: bool = True,
                  prefix_cache_entries: Optional[int] = None,
@@ -191,6 +206,8 @@ class ServeEngine:
                                max_batch=max_batch,
                                max_inflight=max_inflight,
                                chunk_size=chunk_size,
+                               token_budget=token_budget,
+                               policy=sched_policy,
                                prefix_cache=self.prefix_cache)
         # ONE device-pool chain per shard: a step's functional KV update
         # depends on the previous value of the pools it touches, so a
@@ -256,8 +273,9 @@ class ServeEngine:
     def pools(self, value):
         self._shard_pools[0] = value
 
-    def submit(self, prompt: List[int], max_new_tokens: int):
-        return self.sched.submit(prompt, max_new_tokens)
+    def submit(self, prompt: List[int], max_new_tokens: int,
+               slo: str = "interactive"):
+        return self.sched.submit(prompt, max_new_tokens, slo=slo)
 
     def step(self, tid: int) -> bool:
         """One scheduler tick + device step.  Returns False when idle.
@@ -279,6 +297,8 @@ class ServeEngine:
         """
         if plan.kind == "prefill":
             sampled = self._dispatch_prefill(plan)
+        elif plan.kind == "mixed":
+            sampled = self._dispatch_mixed(plan)
         else:
             sampled = self._dispatch_decode(plan)
         self.sched.complete(plan, sampled, tid)
@@ -296,13 +316,13 @@ class ServeEngine:
                       // self.block_size) for r in plan.requests)
         nblk = max(nblk, min(final, self._shard_sizes[shard]))
         w = 1 << max(0, nblk - 1).bit_length()
-        if plan.kind == "decode":
-            # ratchet DECODE widths: batch membership changes (a wide
-            # request completing) must never shrink the width into a
-            # never-compiled shape mid-decode — padding wider is ~free
-            # (the bounded kernel skips dead slots), recompiling is not.
-            # Prefill needs no ratchet: B == 1, so its width is the one
-            # request's own final — stable across all its chunks.
+        if plan.kind in ("decode", "mixed"):
+            # ratchet DECODE (and mixed-batch) widths: batch membership
+            # changes (a wide request completing) must never shrink the
+            # width into a never-compiled shape mid-decode — padding wider
+            # is ~free (the bounded kernel skips dead slots), recompiling
+            # is not.  Pure prefill needs no ratchet: B == 1, so its width
+            # is the one request's own final — stable across all chunks.
             w = max(w, self._width_hwm[shard])
             self._width_hwm[shard] = w
         return w
@@ -374,6 +394,37 @@ class ServeEngine:
                 jnp.asarray(tables), jnp.asarray(tokens),
                 jnp.asarray(positions), jnp.asarray(chunk_lens))
         return np.asarray(out)[:1]
+
+    def _dispatch_mixed(self, plan) -> np.ndarray:
+        """Decode rows + one prefill chunk row in ONE dispatch of the
+        chunked kernel (ragged rows via ``chunk_lens``; decode rows carry
+        1 valid token).  Shape buckets: rows pad to ``max_batch + 1`` (a
+        full decode batch plus the chunk row), columns to the pow2 chunk
+        bucket — the same two ladders the pure plans use, so the compile
+        count stays bounded.  Pad rows write their (masked) token to the
+        scratch slot; pad columns clamp to each row's last valid position
+        so their discarded attention rows stay within materialized pages.
+        """
+        s = plan.shard
+        b, c = plan.tokens.shape
+        rows = (self.max_batch + 1) if self.pad_shapes else b
+        tables, _ = self._bucket_tables(plan, rows)
+        cb = 1 << max(0, c - 1).bit_length() if self.pad_shapes else c
+        tokens = np.zeros((rows, cb), np.int32)
+        tokens[:b, :c] = plan.tokens
+        positions = np.zeros((rows, cb), np.int32)
+        positions[:b, :c] = plan.positions
+        if cb > c:
+            positions[:b, c:] = plan.positions[:, c - 1:c]
+        chunk_lens = np.ones((rows,), np.int32)  # pad rows: 1 scratch token
+        chunk_lens[:b] = plan.chunk_lens
+        with self._device_locks[s]:
+            out, self._shard_pools[s] = self._prefill(
+                self.params, self._shard_pools[s],
+                jnp.asarray(tables), jnp.asarray(tokens),
+                jnp.asarray(positions), jnp.asarray(chunk_lens))
+        # block on the result OUTSIDE the lock (see _dispatch_decode)
+        return np.asarray(out)[:b]
 
     # ------------------------------------------------------------- drain
     def drain(self, tid: int) -> int:

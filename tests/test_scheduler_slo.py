@@ -1,0 +1,321 @@
+"""Mixed-batch token-budget planner + SLO admission control tests.
+
+Covers the ISSUE-7 surface:
+
+* the decode-starvation reproducer: sustained prompt arrival with the
+  legacy TTFT-first planner (``policy="prefill_first"``) starves a live
+  decode request; the mixed-batch token budget keeps it moving — the A/B
+  is asserted in TICKS (deterministic), not wall-clock, over WFE +
+  Crystalline and 1-shard/4-shard pools;
+* ``max_batch`` is a HARD active-set cap (the old planner let the set
+  ratchet to ``max_batch + max_inflight`` as steps pipelined);
+* an evicted request requeues at the HEAD of its intake queue and
+  re-admits before newer arrivals (FCFS under preemption);
+* SLO classes: interactive admits before earlier-submitted batch; an
+  interactive requester under pool pressure sheds a batch-class request
+  even when the batch request is OLDER; a batch requester can never
+  preempt interactive work;
+* the planning deadline bounds the WHOLE planning phase (admission,
+  decode gather, prefill alloc ladder) while ``deadline_ms=0`` stays
+  LIVE — one unit of progress per tick, counted in ``deadline_cutoffs``;
+* engine-level: the mixed planner produces token-exact results vs the
+  prefill-first planner, through real ``kind="mixed"`` dispatches.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.blocks import BlockPool, Scheduler, ShardedBlockPool
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+
+def _complete(sched, plan, tid, tok=5):
+    sched.complete(plan, np.full((len(plan.requests),), tok, np.int64), tid)
+
+
+def _drive(sched, pool, tid, *, max_ticks=2000, until=None):
+    """Tick+complete until ``until()`` (default: everything drained)."""
+    for _ in range(max_ticks):
+        if until is not None and until():
+            return
+        plan = sched.tick(tid)
+        if plan is None:
+            if until is None and not sched.pending() and not sched.active:
+                return
+            pool.cleanup(tid)
+            continue
+        _complete(sched, plan, tid)
+    raise AssertionError("drive() hit the tick limit (livelock?)")
+
+
+# ====================================================== starvation A/B
+@pytest.mark.parametrize("scheme", ("WFE", "Crystalline"))
+@pytest.mark.parametrize("n_shards", (1, 4))
+def test_mixed_planner_fixes_decode_starvation(scheme, n_shards):
+    """Sustained prompt arrival: prefill_first starves a live decode
+    request; the mixed token budget completes it.  The flood keeps a
+    prefill-phase request active on the victim's shard at every tick, so
+    the TTFT-first planner never plans a decode step for it."""
+    n_new = 8
+    flood_len = 16  # 4 chunks each at chunk_size=4: a steady prefill wall
+    tokens_by_policy = {}
+    for policy in ("prefill_first", "mixed"):
+        if n_shards > 1:
+            pool = ShardedBlockPool(256, n_shards=n_shards, max_threads=4,
+                                    scheme=scheme, era_freq=1,
+                                    cleanup_freq=1)
+        else:
+            pool = BlockPool(256, max_threads=4, scheme=scheme,
+                             era_freq=1, cleanup_freq=1)
+        tid = pool.register_thread()
+        sched = Scheduler(pool, block_size=4, max_batch=4, chunk_size=4,
+                          policy=policy)
+        victim = sched.submit([1, 2], n_new)  # rid 0 -> shard 0 = tid 0's
+        # bring the victim into decode phase before the flood starts
+        _drive(sched, pool, tid, until=lambda: victim.phase == "decode")
+        assert victim.phase == "decode"
+        # flood: every tick tops the intake back up, so a prefill-phase
+        # request is ALWAYS active on the victim's shard — the arrival
+        # pattern of an overloaded front door.  Submitting in groups of
+        # n_shards (rids round-robin the shards) lands one request per
+        # shard per group; the backlog is counted on the VICTIM's shard,
+        # not globally — other shards' queues must not satisfy it.
+        floods: list = []
+        for step in range(60):
+            if victim.done:
+                break
+            while sum(1 for r in floods
+                      if r.shard == victim.shard and not r.done) < 4:
+                for _ in range(n_shards):
+                    floods.append(
+                        sched.submit([3 + step % 7] * flood_len, 1))
+            plan = sched.tick(tid)
+            if plan is None:
+                pool.cleanup(tid)
+                continue
+            _complete(sched, plan, tid)
+        tokens_by_policy[policy] = len(victim.generated)
+    assert tokens_by_policy["mixed"] == n_new, \
+        "mixed planner failed to finish the decode victim under flood"
+    assert tokens_by_policy["prefill_first"] < n_new, \
+        "the seed TTFT-first planner no longer starves decode — the " \
+        "reproducer lost its teeth; re-point it at the regression"
+
+
+def test_mixed_plan_spends_one_budget_per_tick():
+    """A mixed tick funds decode rows first, then ONE chunk from the
+    remainder — and emits a single plan accounting for both."""
+    pool = BlockPool(64, max_threads=2, era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    sched = Scheduler(pool, block_size=4, max_batch=4, chunk_size=4,
+                      token_budget=6)
+    decs = [sched.submit([1, 2], 4) for _ in range(3)]
+    _drive(sched, pool, tid,
+           until=lambda: all(r.phase == "decode" for r in decs))
+    pre = sched.submit([9] * 12, 1)
+    mixed_before = sched.stats["mixed_steps"]
+    plan = sched.tick(tid)
+    assert plan.kind == "mixed"
+    assert plan.n_decode == 3
+    assert plan.requests[-1] is pre
+    # budget 6 = 3 decode rows + a 3-token chunk (clipped, not chunk_size)
+    assert plan.n_tokens == 6
+    assert list(plan.chunk_lens) == [1, 1, 1, 3]
+    # decode rows carry their single token; the chunk row the prompt slice
+    assert plan.tokens[3, :3].tolist() == [9, 9, 9]
+    _complete(sched, plan, tid)
+    assert all(len(r.generated) >= 1 for r in decs)
+    assert pre.length == 3
+    assert sched.stats["mixed_steps"] == mixed_before + 1
+    _drive(sched, pool, tid)
+    assert pre.done
+
+
+# ====================================================== hard active cap
+def test_max_batch_is_a_hard_active_cap():
+    """The active set must never exceed max_batch, even with several
+    in-flight plans pipelined (the old condition admitted up to
+    max_batch + max_inflight under load)."""
+    pool = BlockPool(64, max_threads=2, era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    sched = Scheduler(pool, block_size=4, max_batch=2, max_inflight=4)
+    reqs = [sched.submit([1, 2, 3], 3) for _ in range(8)]
+    inflight = []
+    for _ in range(400):
+        if all(r.done for r in reqs):
+            break
+        plan = sched.tick(tid)
+        assert len(sched.active) <= 2, \
+            f"active set grew to {len(sched.active)} > max_batch"
+        if plan is not None:
+            inflight.append(plan)
+        # hold up to 3 plans in flight before completing the oldest —
+        # exactly the pipeline depth that tripped the admission ratchet
+        if len(inflight) >= 3 or (plan is None and inflight):
+            _complete(sched, inflight.pop(0), tid)
+        elif plan is None:
+            pool.cleanup(tid)
+    for p in inflight:
+        _complete(sched, p, tid)
+    _drive(sched, pool, tid)
+    assert all(r.done for r in reqs)
+
+
+# ====================================================== FCFS on eviction
+def test_evicted_request_requeues_at_head():
+    """A preempted request rejoins its intake queue BEFORE newer arrivals
+    (its TTFT is still clocked from the original submit)."""
+    pool = BlockPool(6, max_threads=2, era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    sched = Scheduler(pool, block_size=2, max_batch=2)
+    a = sched.submit([1, 2], 8)  # 5 blocks each at completion: two
+    b = sched.submit([1, 2], 8)  # active requests exceed the 6-block pool
+    c = sched.submit([1, 2], 1)  # newer, waits in the intake queue
+    saw_requeue = False
+    for _ in range(2000):
+        if a.done and b.done and c.done:
+            break
+        was = sched.stats["evictions"]
+        plan = sched.tick(tid)
+        if sched.stats["evictions"] > was:
+            # an eviction happened in this tick: the victim must sit at
+            # the HEAD of the intake queue, ahead of the never-run c
+            q = sched.queue
+            assert q, "eviction did not requeue the victim"
+            assert q[0] is not c and q[0].evictions > 0, \
+                "victim requeued behind a newer request"
+            if c in q:
+                assert q.index(q[0]) < q.index(c)
+            saw_requeue = True
+        if plan is None:
+            pool.cleanup(tid)
+            continue
+        _complete(sched, plan, tid)
+    assert a.done and b.done and c.done
+    assert saw_requeue, "pressure never forced an eviction (dead test)"
+
+
+# ====================================================== SLO classes
+def test_interactive_admits_before_older_batch():
+    pool = BlockPool(32, max_threads=2, era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    sched = Scheduler(pool, block_size=4, max_batch=1)
+    b = sched.submit([1, 2], 2, slo="batch")  # submitted FIRST
+    i = sched.submit([1, 2], 2, slo="interactive")
+    plan = sched.tick(tid)
+    assert sched.active == [i], \
+        "batch-class request admitted ahead of interactive intake"
+    _complete(sched, plan, tid)
+    _drive(sched, pool, tid)
+    assert i.done and b.done
+    assert i.t_first < b.t_first
+
+
+def test_submit_rejects_unknown_slo():
+    pool = BlockPool(8, max_threads=2)
+    sched = Scheduler(pool, block_size=4, max_batch=2)
+    with pytest.raises(ValueError):
+        sched.submit([1], 1, slo="premium")
+
+
+def test_interactive_sheds_older_batch_under_pressure():
+    """Under pool pressure an interactive requester preempts a
+    batch-class request even though the batch request was admitted
+    FIRST (the same-class LIFO rule would have found no victim)."""
+    pool = BlockPool(6, max_threads=2, era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    sched = Scheduler(pool, block_size=2, max_batch=2)
+    b = sched.submit([1, 2], 8, slo="batch")  # older: admitted first
+    i = sched.submit([1, 2], 8, slo="interactive")
+    _drive(sched, pool, tid)
+    assert i.done and b.done
+    assert sched.stats["batch_evictions"] > 0, \
+        "pressure never shed the batch-class request"
+    assert b.evictions > 0 and i.evictions == 0, \
+        "the interactive request was preempted despite a batch victim"
+
+
+def test_batch_never_preempts_interactive():
+    """A batch requester under pressure waits (or shrinks) rather than
+    evicting interactive work — even interactive work admitted AFTER it."""
+    pool = BlockPool(6, max_threads=2, era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    sched = Scheduler(pool, block_size=2, max_batch=2)
+    b = sched.submit([1, 2], 8, slo="batch")
+    i = sched.submit([1, 2], 8, slo="interactive")
+    _drive(sched, pool, tid)
+    assert i.done and b.done
+    assert i.evictions == 0, \
+        "interactive work was shed on behalf of a batch request"
+
+
+# ====================================================== deadline bound
+def test_zero_deadline_stays_live_and_counts_cutoffs():
+    """deadline_ms=0 trips the cutoff in every planning loop, yet each
+    tick still makes >= 1 unit of progress — the pressured workload
+    completes instead of livelocking, and the cutoffs are counted."""
+    pool = BlockPool(6, max_threads=2, era_freq=1, cleanup_freq=1)
+    tid = pool.register_thread()
+    sched = Scheduler(pool, block_size=2, max_batch=4, deadline_ms=0.0)
+    reqs = [sched.submit([1, 2], 6) for _ in range(4)]
+    _drive(sched, pool, tid, max_ticks=4000)
+    assert all(r.done for r in reqs)
+    assert sched.stats["deadline_cutoffs"] > 0, \
+        "a zero deadline never tripped a cutoff (the bound is dead code)"
+
+
+def test_scheduler_rejects_bad_config():
+    pool = BlockPool(8, max_threads=2)
+    with pytest.raises(ValueError):
+        Scheduler(pool, block_size=4, max_batch=2, policy="fifo")
+    with pytest.raises(ValueError):
+        Scheduler(pool, block_size=4, max_batch=2, token_budget=0)
+
+
+# ====================================================== engine level
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = get_smoke_config("stablelm-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, params
+
+
+def test_engine_mixed_policy_token_exact(dense_model):
+    """Mixed dispatches (decode rows + a chunk row through the chunked
+    kernel in ONE step) must change scheduling, never tokens."""
+    cfg, params = dense_model
+    prompts = [[5, 9, 2], [11, 3, 8, 1], [7, 4, 4, 1, 2], [2, 4]]
+    outs = {}
+    for policy in ("prefill_first", "mixed"):
+        engine = ServeEngine(cfg, params, n_blocks=32, block_size=4,
+                             max_batch=4, chunk_size=4,
+                             sched_policy=policy,
+                             era_freq=1, cleanup_freq=1)
+        tid = engine.pool.register_thread()
+        reqs = [engine.submit(p, 5) for p in prompts]
+        stats = engine.run(tid)
+        assert stats["completed"] == len(prompts)
+        if policy == "mixed":
+            assert stats["mixed_steps"] > 0, \
+                "the workload never exercised a mixed dispatch"
+        outs[policy] = [list(r.generated) for r in reqs]
+        assert engine.pool.free_blocks == 32
+    assert outs["mixed"] == outs["prefill_first"], \
+        "mixed-batch dispatch changed generated tokens"
+
+
+def test_engine_submit_slo_passthrough(dense_model):
+    cfg, params = dense_model
+    engine = ServeEngine(cfg, params, n_blocks=32, block_size=4,
+                         max_batch=4, era_freq=1, cleanup_freq=1)
+    tid = engine.pool.register_thread()
+    i = engine.submit([5, 9, 2], 3, slo="interactive")
+    b = engine.submit([5, 9, 2], 3, slo="batch")
+    engine.run(tid)
+    assert i.done and b.done
+    assert (i.slo, b.slo) == ("interactive", "batch")
+    assert i.max_gap >= 0.0 and b.max_gap >= 0.0
