@@ -65,6 +65,14 @@ INVARIANTS = (
 #: blows this budget even on an arbitrarily fast runner.
 MAX_COARSE_COMPILES = 3
 
+#: no-harm bound on the quantized-KV mode: int8 decode TPOT p50 must stay
+#: within this factor of the SAME run's fp32 p50.  On the CPU interpreter
+#: int8 buys no bandwidth (the dequant and requantizing scatter are extra
+#: work), so this is a regression tripwire — a blowup here means the int8
+#: step graph grew something expensive — not a speedup claim; the byte
+#: saving is asserted separately as an exact analytic invariant.
+KV_TPOT_NO_HARM = 1.05
+
 #: absolute slack on the open-loop interactive goodput band: goodput is a
 #: FRACTION of (16) smoke requests meeting SLO, so one request flipping
 #: across the line moves it by ~0.1 on a noisy shared runner — the band
@@ -166,6 +174,39 @@ def check(fresh: dict, baseline: dict, tolerance: float) -> list:
         if isinstance(ratio, (int, float)):
             print(f"scheme matrix: Crystalline vs WFE decode TPOT "
                   f"{ratio:.2f}x (informational, not gated)")
+
+    # quantized-KV gates, all on the FRESH results (the A/B's fp32 leg is
+    # the same-run control, so no cross-machine baseline is needed and an
+    # older committed baseline without the section neither gates nor
+    # fails — the scheme-matrix precedent):
+    #   tpot_ratio <= KV_TPOT_NO_HARM — int8 decode must not slow the
+    #     interpreter-path step beyond noise (no-harm, not a speedup);
+    #   kv_bytes_saved_frac > 0 — the analytic byte model must show int8
+    #     pages streaming fewer bytes (machine-independent, exact).
+    kv = fresh.get("kv_dtype")
+    if kv is None:
+        failures.append("kv_dtype: section missing from fresh results")
+    else:
+        ratio = kv.get("tpot_ratio")
+        if not isinstance(ratio, (int, float)):
+            failures.append("kv_dtype.tpot_ratio: missing")
+        elif ratio > KV_TPOT_NO_HARM:
+            failures.append(
+                f"kv_dtype.tpot_ratio = {ratio:.2f}: int8 decode TPOT p50 "
+                f"exceeds fp32's x {KV_TPOT_NO_HARM} no-harm bound (the "
+                f"quantized step graph grew something expensive)")
+        else:
+            print(f"kv_dtype: int8/fp32 TPOT ratio {ratio:.2f} "
+                  f"(no-harm bound {KV_TPOT_NO_HARM})")
+        saved = kv.get("kv_bytes_saved_frac")
+        if not isinstance(saved, (int, float)):
+            failures.append("kv_dtype.kv_bytes_saved_frac: missing")
+        elif not saved > 0:
+            failures.append(
+                f"kv_dtype.kv_bytes_saved_frac = {saved}: int8 pages must "
+                f"stream fewer bytes per decode step than fp32")
+        else:
+            print(f"kv_dtype: KV bytes/step saved {saved:.0%}")
 
     # open-loop goodput gate: interactive-class requests must keep
     # meeting their SLO under Poisson arrival pressure.  The invariant

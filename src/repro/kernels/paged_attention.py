@@ -28,7 +28,15 @@ prefill); single-token decode is the C == 1 specialization:
   and the kernel body skips the score/accumulate math for them — padded
   table slots cost neither DMA nor FLOPs.  Finalization happens on the
   last grid step regardless, reading the accumulator state a short row
-  stopped updating at its own boundary.
+  stopped updating at its own boundary;
+* QUANTIZED pools (``kv_dtype="int8"``): when per-(block, kv-head) scale
+  arrays ride along (two more scalar-prefetch operands, indexed through
+  the block table exactly like ``num_live_blocks``), the kernel
+  dequantizes each K/V tile in-register right after the VMEM load
+  (``k.astype(f32) * k_scales[tables[b, j], h]``) — K/V stream from HBM
+  at 1 byte/element and the flash accumulator math below is UNCHANGED,
+  so the fused path is bitwise-identical to materializing the
+  dequantized fp32 pools and running the unquantized kernel.
 """
 
 from __future__ import annotations
@@ -46,9 +54,14 @@ from .era_scan import _resolve_interpret
 NEG_INF = -1e30
 
 
-def _paged_chunk_kernel(tables, live, q_ref, qpos_ref, k_ref, v_ref, out_ref,
-                        m_s, l_s, acc_s, *, bs: int, scale: float):
+def _chunk_kernel_body(tables, live, k_scales, v_scales, q_ref, qpos_ref,
+                       k_ref, v_ref, out_ref, m_s, l_s, acc_s, *, bs: int,
+                       scale: float):
+    """Shared flash-walk body; ``k_scales``/``v_scales`` None selects the
+    unquantized load (the fp path's emitted ops are byte-identical to the
+    pre-quantization kernel — the branch resolves at trace time)."""
     bi = pl.program_id(0)
+    h = pl.program_id(1)
     j = pl.program_id(2)
     nblk = pl.num_programs(2)
 
@@ -67,8 +80,19 @@ def _paged_chunk_kernel(tables, live, q_ref, qpos_ref, k_ref, v_ref, out_ref,
     def _update():
         q = q_ref[0, :, 0].astype(jnp.float32)     # (C, G, D)
         qp = qpos_ref[0]                           # (C,) absolute positions
-        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bs, D)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if k_scales is None:
+            k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bs, D)
+            v = v_ref[0, :, 0, :].astype(jnp.float32)
+        else:
+            # fused dequant: one scalar per (pool block, kv head), named
+            # through the SAME protected table snapshot as the page it
+            # scales — int8 -> f32 is exact, the scalar multiply is one
+            # f32 rounding, so this equals materializing the dequantized
+            # pool bitwise (see kernels/quant.dequantize_pool)
+            k = (k_ref[0, :, 0, :].astype(jnp.float32)
+                 * k_scales[tables[bi, j], h])
+            v = (v_ref[0, :, 0, :].astype(jnp.float32)
+                 * v_scales[tables[bi, j], h])
         # (C, G, bs) scores for this pool block
         s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
@@ -96,10 +120,36 @@ def _paged_chunk_kernel(tables, live, q_ref, qpos_ref, k_ref, v_ref, out_ref,
                             ).astype(out_ref.dtype)
 
 
+def _paged_chunk_kernel(tables, live, q_ref, qpos_ref, k_ref, v_ref, out_ref,
+                        m_s, l_s, acc_s, *, bs: int, scale: float):
+    _chunk_kernel_body(tables, live, None, None, q_ref, qpos_ref, k_ref,
+                       v_ref, out_ref, m_s, l_s, acc_s, bs=bs, scale=scale)
+
+
+def _paged_chunk_kernel_q8(tables, live, k_scales, v_scales, q_ref, qpos_ref,
+                           k_ref, v_ref, out_ref, m_s, l_s, acc_s, *,
+                           bs: int, scale: float):
+    _chunk_kernel_body(tables, live, k_scales, v_scales, q_ref, qpos_ref,
+                       k_ref, v_ref, out_ref, m_s, l_s, acc_s, bs=bs,
+                       scale=scale)
+
+
+def _chunk_scratch_shapes(c: int, g: int, d: int) -> list:
+    """The flash walk's VMEM accumulator state, in kernel-argument order:
+    running max ``m`` and normalizer ``l`` (both lane-padded to 128, col 0
+    used) and the (C, G, D) weighted-value accumulator.  ONE definition so
+    an operand change edits one place — both kernel variants share it."""
+    return [pltpu.VMEM((c, g, 128), jnp.float32),  # m (col 0; lane-padded)
+            pltpu.VMEM((c, g, 128), jnp.float32),  # l
+            pltpu.VMEM((c, g, d), jnp.float32)]    # acc
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_attention_chunk(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                           tables: jax.Array, q_positions: jax.Array,
-                          num_live_blocks: jax.Array | None = None, *,
+                          num_live_blocks: jax.Array | None = None,
+                          k_scales: jax.Array | None = None,
+                          v_scales: jax.Array | None = None, *,
                           scale: float | None = None,
                           interpret: bool | None = None) -> jax.Array:
     """q (B,C,KH,G,D); pools (N,bs,KH,D); tables (B,nblk) i32;
@@ -114,53 +164,71 @@ def paged_attention_chunk(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     derived from the highest query position — is the exact bound).
     ``interpret=None`` auto-selects compiled Mosaic on TPU backends and
     the interpreter elsewhere (CPU CI), like ``era_scan``.
+
+    ``k_scales``/``v_scales`` (N, KH) f32 select the int8 pool mode: pools
+    hold symmetric per-(block, kv-head) codes and the kernel dequantizes
+    each tile in-register after the load (see module docstring).  Both or
+    neither must be given.
     """
     b, c, kh, g, d = q.shape
     n, bs, _, _ = k_pool.shape
     nblk = tables.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("k_scales and v_scales must be given together")
+    if k_pool.dtype == jnp.int8 and k_scales is None:
+        raise ValueError("int8 pools need k_scales/v_scales "
+                         "(init_pools(kv_dtype='int8') provides them)")
     if num_live_blocks is None:
         # exact bound: the last block holding any causally visible position
         num_live_blocks = jnp.max(q_positions, axis=1) // bs + 1
     num_live_blocks = jnp.minimum(
         jnp.asarray(num_live_blocks, jnp.int32), nblk)
 
-    kernel = functools.partial(_paged_chunk_kernel, bs=bs, scale=scale)
     # dead-slot clamp: j >= live[b] repeats the LAST live block's index, so
     # the pipeline sees an unchanged (non-decreasing run of equal) index
-    # and skips the HBM->VMEM copy for every dead iteration
-    kv_index = lambda bi, h, j, tbl, live: (
+    # and skips the HBM->VMEM copy for every dead iteration.  The *pf tail
+    # absorbs the int8 mode's extra scale operands — index maps see every
+    # scalar-prefetch ref, however many ride along.
+    kv_index = lambda bi, h, j, tbl, live, *pf: (
         tbl[bi, jnp.minimum(j, jnp.maximum(live[bi] - 1, 0))], 0, h, 0)
+    q_index = lambda bi, h, j, *pf: (bi, 0, h, 0, 0)
+    qpos_index = lambda bi, h, j, *pf: (bi, 0)
+    if k_scales is None:
+        kernel = functools.partial(_paged_chunk_kernel, bs=bs, scale=scale)
+        prefetch = (tables, num_live_blocks)
+    else:
+        kernel = functools.partial(_paged_chunk_kernel_q8, bs=bs,
+                                   scale=scale)
+        prefetch = (tables, num_live_blocks,
+                    jnp.asarray(k_scales, jnp.float32),
+                    jnp.asarray(v_scales, jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(prefetch),
         grid=(b, kh, nblk),
         in_specs=[
-            pl.BlockSpec((1, c, 1, g, d),
-                         lambda bi, h, j, tbl, live: (bi, 0, h, 0, 0)),
-            pl.BlockSpec((1, c), lambda bi, h, j, tbl, live: (bi, 0)),
+            pl.BlockSpec((1, c, 1, g, d), q_index),
+            pl.BlockSpec((1, c), qpos_index),
             pl.BlockSpec((1, bs, 1, d), kv_index),
             pl.BlockSpec((1, bs, 1, d), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, c, 1, g, d),
-                               lambda bi, h, j, tbl, live: (bi, 0, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((c, g, 128), jnp.float32),  # m (col 0; lane-padded)
-            pltpu.VMEM((c, g, 128), jnp.float32),  # l
-            pltpu.VMEM((c, g, d), jnp.float32),    # acc
-        ],
+        out_specs=pl.BlockSpec((1, c, 1, g, d), q_index),
+        scratch_shapes=_chunk_scratch_shapes(c, g, d),
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, c, kh, g, d), q.dtype),
         interpret=_resolve_interpret(interpret),
-    )(tables, num_live_blocks, q, q_positions, k_pool, v_pool)
+    )(*prefetch, q, q_positions, k_pool, v_pool)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     tables: jax.Array, lengths: jax.Array,
-                    num_live_blocks: jax.Array | None = None, *,
+                    num_live_blocks: jax.Array | None = None,
+                    k_scales: jax.Array | None = None,
+                    v_scales: jax.Array | None = None, *,
                     scale: float | None = None,
                     interpret: bool | None = None) -> jax.Array:
     """Single-token decode attention: the C == 1 chunk specialization.
@@ -168,12 +236,13 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     q (B,KH,G,D); pools (N,bs,KH,D); tables (B,nblk) i32; lengths (B,) i32
     (context length INCLUDING the query token).  Returns (B, KH, G, D).
     ``num_live_blocks`` defaults to the exact per-request bound
-    ``ceil(lengths / bs)`` — see ``paged_attention_chunk``.
+    ``ceil(lengths / bs)``; ``k_scales``/``v_scales`` select the int8
+    pool mode — see ``paged_attention_chunk``.
     """
     # a decode token at position lengths-1 sees kv positions < lengths —
     # exactly the chunk kernel's causal-by-position mask with C == 1
     q_positions = (lengths - 1).astype(jnp.int32)[:, None]  # (B, 1)
     out = paged_attention_chunk(q[:, None], k_pool, v_pool, tables,
-                                q_positions, num_live_blocks, scale=scale,
-                                interpret=interpret)
+                                q_positions, num_live_blocks, k_scales,
+                                v_scales, scale=scale, interpret=interpret)
     return out[:, 0]

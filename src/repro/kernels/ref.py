@@ -85,6 +85,54 @@ def paged_attention_chunk_ref(
     return out.astype(q.dtype)
 
 
+# ------------------------------------------------ int8 paged chunk attention
+def paged_attention_chunk_int8_ref(
+    q: jax.Array,            # (B, C, KH, G, D) fp query chunk
+    k_pool: jax.Array,       # (N, bs, KH, D) int8 key codes
+    v_pool: jax.Array,       # (N, bs, KH, D) int8 value codes
+    k_scales: jax.Array,     # (N, KH) f32 per-(block, kv-head) scales
+    v_scales: jax.Array,     # (N, KH) f32
+    tables: jax.Array,
+    q_positions: jax.Array,
+    num_live_blocks: Optional[jax.Array] = None,
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Oracle for the kernel's fused-dequant int8 mode: materialize the
+    dequantized pools with EXACTLY the kernel's arithmetic (int8 -> f32 is
+    exact, then one f32 multiply by the block/head scale — see
+    ``kernels/quant.dequantize_pool``) and run the fp oracle on them.
+    Everything downstream of the dequant is shared with the fp path, so
+    kernel-vs-oracle checks compare only the quantization semantics."""
+    from .quant import dequantize_pool
+
+    return paged_attention_chunk_ref(
+        q, dequantize_pool(k_pool, k_scales),
+        dequantize_pool(v_pool, v_scales), tables, q_positions,
+        num_live_blocks, scale=scale)
+
+
+def paged_attention_int8_ref(
+    q: jax.Array,            # (B, KH, G, D) one fp query token per request
+    k_pool: jax.Array,       # (N, bs, KH, D) int8 key codes
+    v_pool: jax.Array,
+    k_scales: jax.Array,     # (N, KH) f32
+    v_scales: jax.Array,
+    tables: jax.Array,
+    lengths: jax.Array,
+    num_live_blocks: Optional[jax.Array] = None,
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Decode (C == 1) specialization of the int8 oracle."""
+    from .quant import dequantize_pool
+
+    return paged_attention_ref(
+        q, dequantize_pool(k_pool, k_scales),
+        dequantize_pool(v_pool, v_scales), tables, lengths,
+        num_live_blocks, scale=scale)
+
+
 # ----------------------------------------------------- paged decode attention
 def paged_attention_ref(
     q: jax.Array,          # (B, KH, G, D)  one query token per request

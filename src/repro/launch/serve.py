@@ -83,6 +83,13 @@ def main(argv=None) -> int:
                     help="SLO class for submitted requests ('mix' tags "
                          "every other request batch-class: batch admits "
                          "after — and sheds before — interactive)")
+    ap.add_argument("--kv-dtype", default=None, choices=("fp32", "int8"),
+                    help="KV pool storage: 'int8' stores pages as "
+                         "symmetric per-(block, kv-head) codes with fp32 "
+                         "scales and dequantizes inside the attention "
+                         "kernel — half the K/V bytes per decode step, "
+                         "~2x the blocks at fixed pool memory (default: "
+                         "the arch dtype)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable the refcounted prefix cache (prompts "
                          "sharing a block-aligned prefix alias the same "
@@ -111,7 +118,13 @@ def main(argv=None) -> int:
                          sched_policy=args.sched_policy,
                          bucket_policy=args.bucket_policy,
                          prefix_caching=not args.no_prefix_cache,
+                         kv_dtype=args.kv_dtype,
                          **smr_kwargs)
+    if args.kv_dtype == "int8":
+        print("kv_dtype=int8: pool pages are symmetric int8 codes + "
+              "per-(block, kv-head) fp32 scales (fused in-kernel dequant)")
+    elif args.kv_dtype:
+        print(f"kv_dtype={args.kv_dtype}")
     reqs = []
     for i in range(args.requests):
         prompt = [(3 * i + j) % cfg.vocab_size for j in range(1 + i % 6)]

@@ -154,11 +154,20 @@ class ServeEngine:
                  bucket_policy: str = "maxlen",
                  prefix_caching: bool = True,
                  prefix_cache_entries: Optional[int] = None,
+                 kv_dtype: Optional[str] = None,
                  **smr_kwargs):
         self.cfg = cfg
         self.params = params
         self.block_size = block_size
         self.use_kernel = use_kernel
+        # quantized KV mode: ``kv_dtype="int8"`` stores pool pages as
+        # symmetric per-(block, kv-head) int8 codes with fp32 scale arrays
+        # riding in the pools dict (donated alongside the pages by the
+        # jitted steps — the pools pytree gains two leaves, so the shared
+        # jit caches key on the new structure automatically).  Width
+        # bucketing, the scratch pad slot, and ALL blocks-layer logic are
+        # unchanged: scales are pool-slot-indexed (see init_pools).
+        self.kv_dtype = kv_dtype
         # shape bucketing: pad every step to (max_batch, bucketed table
         # width) so XLA compiles once per bucket instead of once per
         # (B, nblk) — without it the serve loop is recompile-bound
@@ -224,7 +233,8 @@ class ServeEngine:
         # one extra scratch slot per shard absorbs the KV writes of
         # batch-padding rows — it is never handed out by the block pool, so
         # padded steps can't corrupt a live request's pages
-        self._shard_pools = [init_pools(cfg, size + pad, block_size)
+        self._shard_pools = [init_pools(cfg, size + pad, block_size,
+                                        kv_dtype=kv_dtype)
                              for size in self._shard_sizes]
         # per-shard dispatch locks: each serializes one shard's functional
         # KV-pool chain; the wait on the device result happens outside

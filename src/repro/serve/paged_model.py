@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import paged_chunk_attention, paged_decode_attention
+from repro.kernels.quant import scatter_quantized
 from repro.models import transformer
 from repro.models.attention import _qkv
 from repro.models.layers import (apply_mlp, apply_norm, embed_tokens, matmul,
@@ -28,16 +29,53 @@ from repro.models import moe as moe_mod
 Params = Dict[str, Any]
 
 
-def init_pools(cfg, n_blocks: int, block_size: int):
-    """One K and one V pool per stacked group-layer: (G, N, bs, KH, D)."""
+#: ``kv_dtype=`` strings -> pool storage dtype (None = follow cfg.dtype)
+KV_DTYPES = {"fp32": jnp.float32, "fp16": jnp.float16,
+             "bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
+def init_pools(cfg, n_blocks: int, block_size: int, kv_dtype=None):
+    """One K and one V pool per stacked group-layer: (L, N, bs, KH, D).
+
+    ``kv_dtype`` overrides the pool storage dtype (``KV_DTYPES`` keys;
+    None follows ``cfg.dtype``).  ``"int8"`` stores symmetric
+    per-(block, kv-head) codes and additionally allocates ``k_scale`` /
+    ``v_scale`` arrays shaped (L, N, KH) f32 — see ``kernels.quant``.
+
+    The scale slots are POOL-SLOT-INDEXED: scale row ``[l, n]`` belongs to
+    pool block ``n`` forever, exactly like the page bytes at ``pool[l, n]``.
+    Allocation, retirement, sharing, and era-reclamation all operate on
+    block IDS and never dereference pool storage, so the blocks layer
+    (BlockPool / PrefixCache / era tables) needs ZERO changes for int8
+    mode: a scale is only ever read through a request's protected table
+    snapshot — the same snapshot that names the page it scales — so the
+    WFE era-safety argument covers scales for free.  Reallocation of a
+    reclaimed block needs no reset either: a prior tenant's stale CODES
+    are causally dead (a new tenant's queries only see offsets its own
+    scatters wrote), and its stale SCALE can only make the running absmax
+    start higher — codes and dequant always use the same per-slot scale,
+    so a recycled slot is merely quantized a notch coarser (bounded by
+    the largest absmax the slot ever held), never incorrectly.
+    """
     kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-    shape = (cfg.n_groups * len(cfg.block_pattern), n_blocks, block_size,
-             kh, hd)
-    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+    if kv_dtype is not None and kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype={kv_dtype!r}: expected one of "
+                         f"{sorted(KV_DTYPES)} or None")
+    dtype = cfg.dtype if kv_dtype is None else KV_DTYPES[kv_dtype]
+    n_layers = cfg.n_groups * len(cfg.block_pattern)
+    shape = (n_layers, n_blocks, block_size, kh, hd)
+    pools = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if dtype == jnp.int8:
+        sshape = (n_layers, n_blocks, kh)
+        pools["k_scale"] = jnp.zeros(sshape, jnp.float32)
+        pools["v_scale"] = jnp.zeros(sshape, jnp.float32)
+    return pools
 
 
 POOL_AXES = {"k": (None, None, None, "kv_heads", "head_dim"),
-             "v": (None, None, None, "kv_heads", "head_dim")}
+             "v": (None, None, None, "kv_heads", "head_dim"),
+             "k_scale": (None, None, "kv_heads"),
+             "v_scale": (None, None, "kv_heads")}
 
 
 def _check_paged_support(cfg):
@@ -55,10 +93,17 @@ def paged_decode_step(cfg, params, pools, tables, lengths, tokens, positions,
     tables (B, nblk) i32; lengths (B,) i32 (INCLUDING the new token);
     tokens (B,) i32; positions (B,) i32 (= lengths - 1).
     Returns (logits (B, V) f32, updated pools).
+
+    int8 pools (``init_pools(kv_dtype="int8")`` — ``k_scale``/``v_scale``
+    present): the scatter quantizes the new token under the block's
+    running absmax (``kernels.quant.scatter_quantized``) and attention
+    dequantizes through the scales; fp pools take the bitwise-unchanged
+    original path.
     """
     _check_paged_support(cfg)
     b = tokens.shape[0]
     bs = pools["k"].shape[2]
+    quantized = "k_scale" in pools
     kh, hd, h = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_heads
     g = h // kh
     x = embed_tokens(cfg, params["embed"], tokens[:, None])
@@ -71,16 +116,25 @@ def paged_decode_step(cfg, params, pools, tables, lengths, tokens, positions,
     num_live = (positions // bs + 1).astype(jnp.int32)  # (B,)
 
     def layer_fn(x, xs):
-        bp, k_pool, v_pool = xs  # (N, bs, KH, D) pools for this layer
+        bp, k_pool, v_pool, k_sc, v_sc = xs  # this layer's pools (+scales)
         hn = apply_norm(cfg, bp["norm_mix"], x)
         q, k1, v1 = _qkv(cfg, bp["mix"], hn, positions[:, None])
         # scatter the new K/V into the paged pool
-        k_pool = k_pool.at[blk_of_tok, off].set(k1[:, 0])
-        v_pool = v_pool.at[blk_of_tok, off].set(v1[:, 0])
+        if quantized:
+            k_pool, k_sc = scatter_quantized(
+                k_pool, k_sc, blk_of_tok[:, None], off[:, None], k1,
+                _DROP_BLOCK)
+            v_pool, v_sc = scatter_quantized(
+                v_pool, v_sc, blk_of_tok[:, None], off[:, None], v1,
+                _DROP_BLOCK)
+        else:
+            k_pool = k_pool.at[blk_of_tok, off].set(k1[:, 0])
+            v_pool = v_pool.at[blk_of_tok, off].set(v1[:, 0])
         # (B, 1, KH*G*D) projection -> grouped (B, KH, G, D) query layout
         qg = q.reshape(b, kh, g, hd)
         out = paged_decode_attention(qg, k_pool, v_pool, tables, lengths,
-                                     num_live, scale=1.0 / math.sqrt(hd),
+                                     num_live, k_sc, v_sc,
+                                     scale=1.0 / math.sqrt(hd),
                                      use_kernel=use_kernel)
         out = out.reshape(b, 1, h * hd).astype(x.dtype)
         x = x + matmul(out, bp["mix"]["wo"])
@@ -89,7 +143,7 @@ def paged_decode_step(cfg, params, pools, tables, lengths, tokens, positions,
             ff = moe_mod.apply_moe(cfg, bp["mlp"], hn) if cfg.is_moe \
                 else apply_mlp(cfg, bp["mlp"], hn)
             x = x + ff
-        return x, (k_pool, v_pool)
+        return x, (k_pool, v_pool, k_sc, v_sc)
 
     # flatten the group structure: layer l = (group g, pattern j)
     n_pat = len(cfg.block_pattern)
@@ -101,13 +155,20 @@ def paged_decode_step(cfg, params, pools, tables, lengths, tokens, positions,
                             params["groups"][f"b{j}_{kind}"])
 
     n_layers = cfg.n_groups * n_pat
-    new_k, new_v = [], []
+    new_k, new_v, new_ks, new_vs = [], [], [], []
     for l in range(n_layers):
-        x, (kp, vp) = layer_fn(x, (layer_param(l), pools["k"][l],
-                                   pools["v"][l]))
+        x, (kp, vp, ks, vs) = layer_fn(
+            x, (layer_param(l), pools["k"][l], pools["v"][l],
+                pools["k_scale"][l] if quantized else None,
+                pools["v_scale"][l] if quantized else None))
         new_k.append(kp)
         new_v.append(vp)
+        new_ks.append(ks)
+        new_vs.append(vs)
     pools = {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}
+    if quantized:
+        pools["k_scale"] = jnp.stack(new_ks)
+        pools["v_scale"] = jnp.stack(new_vs)
     x = apply_norm(cfg, params["final_norm"], x)
     head = params["embed"] if cfg.tie_embeddings else params["head"]
     logits = unembed(cfg, head, x)[:, 0]
@@ -147,6 +208,7 @@ def paged_prefill_chunk(cfg, params, pools, tables, tokens, positions,
     _check_paged_support(cfg)
     b, c = tokens.shape
     bs = pools["k"].shape[2]
+    quantized = "k_scale" in pools
     nblk = tables.shape[1]
     kh, hd, h = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_heads
     g = h // kh
@@ -167,7 +229,7 @@ def paged_prefill_chunk(cfg, params, pools, tables, tokens, positions,
 
     n_pat = len(cfg.block_pattern)
     n_layers = cfg.n_groups * n_pat
-    new_k, new_v = [], []
+    new_k, new_v, new_ks, new_vs = [], [], [], []
     for l in range(n_layers):
         g_i, j = divmod(l, n_pat)
         kind = cfg.block_pattern[j]
@@ -176,11 +238,21 @@ def paged_prefill_chunk(cfg, params, pools, tables, tokens, positions,
         q, k1, v1 = _qkv(cfg, bp["mix"], hn, positions)
         # scatter the chunk's K/V into the paged pool FIRST, so the
         # attention below sees intra-chunk keys through the same tables
-        k_pool = pools["k"][l].at[blk, off].set(k1, mode="drop")
-        v_pool = pools["v"][l].at[blk, off].set(v1, mode="drop")
+        k_sc = v_sc = None
+        if quantized:
+            k_pool, k_sc = scatter_quantized(
+                pools["k"][l], pools["k_scale"][l], blk, off, k1,
+                _DROP_BLOCK)
+            v_pool, v_sc = scatter_quantized(
+                pools["v"][l], pools["v_scale"][l], blk, off, v1,
+                _DROP_BLOCK)
+        else:
+            k_pool = pools["k"][l].at[blk, off].set(k1, mode="drop")
+            v_pool = pools["v"][l].at[blk, off].set(v1, mode="drop")
         qg = q.reshape(b, c, kh, g, hd)
         out = paged_chunk_attention(qg, k_pool, v_pool, tables, positions,
-                                    num_live, scale=1.0 / math.sqrt(hd),
+                                    num_live, k_sc, v_sc,
+                                    scale=1.0 / math.sqrt(hd),
                                     use_kernel=use_kernel)
         out = out.reshape(b, c, h * hd).astype(x.dtype)
         x = x + matmul(out, bp["mix"]["wo"])
@@ -191,7 +263,12 @@ def paged_prefill_chunk(cfg, params, pools, tables, tokens, positions,
             x = x + ff
         new_k.append(k_pool)
         new_v.append(v_pool)
+        new_ks.append(k_sc)
+        new_vs.append(v_sc)
     pools = {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}
+    if quantized:
+        pools["k_scale"] = jnp.stack(new_ks)
+        pools["v_scale"] = jnp.stack(new_vs)
     # unembed ONLY each row's last valid token — the chunk that consumes
     # the final prompt token yields the first generated token from it
     last = x[jnp.arange(b), chunk_lens - 1][:, None]  # (B, 1, d)
@@ -202,14 +279,33 @@ def paged_prefill_chunk(cfg, params, pools, tables, tokens, positions,
 
 
 # ===================================================================== MLA
-def init_mla_pools(cfg, n_blocks: int, block_size: int):
+def init_mla_pools(cfg, n_blocks: int, block_size: int, kv_dtype=None):
     """Paged MLA latent pool: pages store (c_kv ‖ k_rope) rows — 576 B/token
     for deepseek-v2 instead of 2·KH·D; the same WFE block lifecycle applies.
+
+    ``kv_dtype="int8"`` is rejected up front: a latent page row is the
+    FUSED ``(c_kv ‖ k_rope)`` vector, not per-head K/V, so the dense-GQA
+    per-(block, kv-head) symmetric scale layout doesn't apply — the
+    low-rank ``c_kv`` half and the rope'd ``k_rope`` half have different
+    dynamic ranges and would need a split (per-half or per-column) scale
+    scheme plus a latent-space dequant in ``paged_mla_decode_step``.
+    Failing here beats the silent fp allocation that used to surface only
+    as a dtype error deep inside the jitted step.
     """
+    if kv_dtype == "int8":
+        raise NotImplementedError(
+            "kv_dtype='int8' is not supported for paged MLA: latent pages "
+            "store fused (c_kv ‖ k_rope) rows whose two halves need "
+            "separate scale ranges — the per-(block, kv-head) scheme of "
+            "the dense pools does not map onto the latent cache")
+    if kv_dtype is not None and kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype={kv_dtype!r}: expected one of "
+                         f"{sorted(KV_DTYPES)} or None")
+    dtype = cfg.dtype if kv_dtype is None else KV_DTYPES[kv_dtype]
     width = cfg.kv_lora_rank + cfg.rope_head_dim
     shape = (cfg.n_groups * len(cfg.block_pattern), n_blocks, block_size,
              width)
-    return {"lat": jnp.zeros(shape, cfg.dtype)}
+    return {"lat": jnp.zeros(shape, dtype)}
 
 
 def paged_mla_decode_step(cfg, params, pools, tables, lengths, tokens,
@@ -227,6 +323,11 @@ def paged_mla_decode_step(cfg, params, pools, tables, lengths, tokens,
     from repro.models.layers import apply_norm as _norm
 
     assert cfg.use_mla
+    if pools["lat"].dtype == jnp.int8:
+        raise NotImplementedError(
+            "paged_mla_decode_step has no int8 latent path — see "
+            "init_mla_pools (fused (c_kv ‖ k_rope) rows need a split "
+            "scale scheme)")
     b = tokens.shape[0]
     bs = pools["lat"].shape[2]
     h = cfg.n_heads

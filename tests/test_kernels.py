@@ -353,6 +353,121 @@ def test_decode_wrapper_bounded_matches_chunk():
                                rtol=2e-5, atol=2e-5)
 
 
+# ==================================================== int8 quantized pools
+def _int8_pools(key, n, bs, kh, d):
+    """Random int8 code pools + per-(block, kv-head) scales."""
+    ks = jax.random.split(key, 4)
+    kq = jax.random.randint(ks[0], (n, bs, kh, d), -127, 128, jnp.int8)
+    vq = jax.random.randint(ks[1], (n, bs, kh, d), -127, 128, jnp.int8)
+    ksc = jax.random.uniform(ks[2], (n, kh), jnp.float32, 0.005, 0.05)
+    vsc = jax.random.uniform(ks[3], (n, kh), jnp.float32, 0.005, 0.05)
+    return kq, vq, ksc, vsc
+
+
+@pytest.mark.parametrize("b,c,kh,g,d,bs,nblk", [
+    (3, 4, 2, 2, 64, 8, 5),     # ragged contexts mid-prompt
+    (2, 1, 1, 4, 64, 16, 4),    # C == 1 (decode-as-chunk)
+    (1, 8, 2, 1, 128, 4, 7),    # chunk wider than a block
+])
+def test_int8_kernel_bitwise_matches_materialized_dequant(b, c, kh, g, d,
+                                                          bs, nblk):
+    """The fused in-register dequant's anchor claim: int8 codes through
+    the quantized kernel must be BITWISE identical to materializing the
+    dequantized fp32 pools and running the unquantized kernel (int8 ->
+    f32 is exact; the scalar multiply is the same single f32 rounding in
+    both paths) — across the same ragged-chunk matrix the bounded-grid
+    tests use.  Against the int8 ORACLE (plain softmax vs flash walk)
+    the standard numeric tolerance applies."""
+    from repro.kernels.quant import dequantize_pool
+
+    ks = jax.random.split(jax.random.key(b * 31 + c + nblk), 3)
+    n = b * nblk + 2
+    q = jax.random.normal(ks[0], (b, c, kh, g, d), jnp.float32)
+    kq, vq, ksc, vsc = _int8_pools(ks[1], n, bs, kh, d)
+    perm = jax.random.permutation(ks[2], n)[: b * nblk].reshape(b, nblk)
+    tables = perm.astype(jnp.int32)
+    ctx = jax.random.randint(ks[0], (b, 1), 0, nblk * bs - c + 1, jnp.int32)
+    qpos = ctx + jnp.arange(c, dtype=jnp.int32)[None, :]
+    live = jnp.max(qpos, axis=1) // bs + 1
+
+    fused = paged_attention_chunk(q, kq, vq, tables, qpos, live, ksc, vsc,
+                                  interpret=True)
+    mat = paged_attention_chunk(q, dequantize_pool(kq, ksc),
+                                dequantize_pool(vq, vsc), tables, qpos,
+                                live, interpret=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(mat))
+    want = ref.paged_attention_chunk_int8_ref(q, kq, vq, ksc, vsc, tables,
+                                              qpos, live)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_int8_num_live_blocks_spans_one_to_nblk():
+    """The int8 twin of the fp num_live sweep: kernel vs int8 oracle under
+    every bound depth 1..nblk, including bounds cutting below the causal
+    range (dead slots hold garbage codes AND garbage scales)."""
+    b, c, kh, g, d, bs, nblk = 2, 3, 2, 2, 64, 4, 6
+    ks = jax.random.split(jax.random.key(13), 3)
+    n = b * nblk + 1
+    q = jax.random.normal(ks[0], (b, c, kh, g, d), jnp.float32)
+    kq, vq, ksc, vsc = _int8_pools(ks[1], n, bs, kh, d)
+    perm = jax.random.permutation(ks[2], n)[: b * nblk].reshape(b, nblk)
+    tables = perm.astype(jnp.int32)
+    qpos = (nblk * bs - c + jnp.arange(c, dtype=jnp.int32))[None, :].repeat(
+        b, axis=0)
+    for live in range(1, nblk + 1):
+        nl = jnp.full((b,), live, jnp.int32)
+        got = paged_attention_chunk(q, kq, vq, tables, qpos, nl, ksc, vsc,
+                                    interpret=True)
+        want = ref.paged_attention_chunk_int8_ref(q, kq, vq, ksc, vsc,
+                                                  tables, qpos, nl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5, err_msg=f"{live=}")
+
+
+def test_int8_dead_slot_scales_never_read():
+    """NaN-poisoning the scales of every block beyond a request's bound
+    must not change the output: the kernel's scale lookup goes through
+    the SAME clamped table walk as the page fetch, so a dead slot's
+    scale is as unreachable as its bytes (the int8 extension of the
+    DMA-skip safety argument — and the exact property that makes a
+    freed block's stale scale harmless)."""
+    b, c, kh, g, d, bs, nblk = 1, 2, 2, 2, 64, 4, 5
+    ks = jax.random.split(jax.random.key(31), 2)
+    n = nblk + 2
+    q = jax.random.normal(ks[0], (b, c, kh, g, d), jnp.float32)
+    kq, vq, ksc, vsc = _int8_pools(ks[1], n, bs, kh, d)
+    tables = jnp.arange(nblk, dtype=jnp.int32)[None, :]
+    live = 2
+    qpos = (live * bs - c + jnp.arange(c, dtype=jnp.int32))[None, :]
+    nl = jnp.full((b,), live, jnp.int32)
+    out1 = paged_attention_chunk(q, kq, vq, tables, qpos, nl, ksc, vsc,
+                                 interpret=True)
+    dead = jnp.arange(n)[:, None] >= live  # blocks 2.. poisoned
+    ksc2 = jnp.where(dead, jnp.nan, ksc)
+    vsc2 = jnp.where(dead, jnp.nan, vsc)
+    out2 = paged_attention_chunk(q, kq, vq, tables, qpos, nl, ksc2, vsc2,
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert np.isfinite(np.asarray(out2)).all()
+
+
+def test_int8_pool_requires_scales():
+    """An int8 pool without scale operands must fail loudly at the kernel
+    boundary, and giving only one of the two scales is rejected too."""
+    b, c, kh, g, d, bs, nblk = 1, 1, 1, 1, 64, 4, 2
+    ks = jax.random.split(jax.random.key(7), 2)
+    q = jax.random.normal(ks[0], (b, c, kh, g, d), jnp.float32)
+    kq, vq, ksc, _ = _int8_pools(ks[1], nblk, bs, kh, d)
+    tables = jnp.arange(nblk, dtype=jnp.int32)[None, :]
+    qpos = jnp.zeros((b, c), jnp.int32)
+    with pytest.raises(ValueError, match="int8 pools need"):
+        paged_attention_chunk(q, kq, vq, tables, qpos, interpret=True)
+    with pytest.raises(ValueError, match="given together"):
+        paged_attention_chunk(q, kq, vq, tables, qpos, None, ksc, None,
+                              interpret=True)
+
+
 # ========================================================== flash_attention
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,t,h,kh,d,cq,ck", [
