@@ -208,6 +208,40 @@ def check(fresh: dict, baseline: dict, tolerance: float) -> list:
         else:
             print(f"kv_dtype: KV bytes/step saved {saved:.0%}")
 
+    # cancellation gates, all on the FRESH results (the section only
+    # exists in JSONs produced since the serving front-end landed — an
+    # older committed baseline without it neither gates nor fails, the
+    # scheme_matrix precedent).  All three are machine-independent:
+    #   unreclaimed == 0 — every page a cancelled client abandoned must
+    #     reclaim through the refcount/era path by the end of the drain;
+    #   n_cancelled > 0 — the scenario must actually abandon requests
+    #     (a vacuous run must not green-light the gate);
+    #   wasted_frac in [0, 1] — the wasted-tokens accounting must be a
+    #     well-formed fraction of generated tokens.
+    ca = fresh.get("cancellation")
+    if ca is not None:
+        left = ca.get("unreclaimed")
+        if left != 0:
+            failures.append(
+                f"cancellation.unreclaimed = {left!r}: abandoned pages "
+                f"must reclaim through the refcount/era path")
+        if not ca.get("n_cancelled"):
+            failures.append(
+                "cancellation.n_cancelled = 0: the scenario must actually "
+                "abandon requests mid-flight")
+        wf = ca.get("wasted_frac")
+        if not isinstance(wf, (int, float)) or not 0.0 <= wf <= 1.0:
+            failures.append(
+                f"cancellation.wasted_frac = {wf!r}: must be a fraction "
+                f"in [0, 1]")
+        else:
+            lat = ca.get("cancel_latency", {}).get("p50_ms")
+            print(f"cancellation: {ca.get('n_cancelled')} abandoned, "
+                  f"wasted-tokens fraction {wf:.2f}, cancel latency p50 "
+                  + (f"{lat:.1f} ms" if isinstance(lat, (int, float))
+                     else "-")
+                  + " (latency informational, not gated)")
+
     # open-loop goodput gate: interactive-class requests must keep
     # meeting their SLO under Poisson arrival pressure.  The invariant
     # (goodput_interactive > 0 with interactive arrivals present) is

@@ -63,6 +63,16 @@ Modes:
 
   PYTHONPATH=src python benchmarks/serve_bench.py --open-loop --arrival-rate 8
 
+* ``run_cancellation()`` / ``--cancel-frac`` — the mid-flight abandonment
+  scenario: open-loop arrivals where a fraction of clients cancel after a
+  few generated tokens (the serving front-end's disconnect path), some
+  while still queued.  Reports the wasted-tokens fraction,
+  cancel-latency percentiles (cancel -> blocks released), and
+  ``unreclaimed`` — which must be 0: every abandoned page reclaims
+  through the refcount/era path.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --cancel-frac 0.5
+
 * ``--smoke`` — a seconds-scale tiny-config pass over ALL scenarios for
   CI, emitting the TTFT/TPOT JSON schema (``--json PATH``) the bench
   trajectory and the perf-regression gate consume.  The bench validates
@@ -747,6 +757,140 @@ def run_open_loop(arrival_rate: float = None, n_requests: int = 24,
     return out
 
 
+# ----------------------------------------------------- cancellation scenario
+def run_cancellation(cancel_frac: float = 0.5, cancel_after: int = 3,
+                     arrival_rate: float = None, n_requests: int = 16,
+                     prompt_len: int = 8, new_tokens: int = 16,
+                     block_size: int = 4, chunk_size: int = 8,
+                     scheme: str = "WFE", seed: int = 0,
+                     build=_build_base) -> dict:
+    """Open-loop arrivals where a fraction of clients ABANDON mid-flight.
+
+    The adversarial reclamation pattern the serving front-end introduces:
+    blocks die because the client left, not because generation finished.
+    A feeder thread submits requests on a Poisson clock; ``cancel_frac``
+    of them carry an ``on_token`` hook that cancels after
+    ``cancel_after`` generated tokens (the disconnect path — the hook
+    runs under the scheduler lock, exactly like the edge's
+    ``call_soon_threadsafe`` handoff), and every fourth cancelled request
+    is instead cancelled by the FEEDER right after submit — a genuine
+    cross-thread race against admission (the queued-cancel path).
+
+    Reports (definitions in docs/benchmarks.md):
+
+    * ``wasted_frac`` — tokens generated for cancelled requests / all
+      generated tokens: the compute the server spent on clients that left;
+    * ``cancel_latency`` — percentiles of ``Request.cancel_latency``
+      (cancel() -> blocks released): how long an abandoned request kept
+      its pages referenced;
+    * ``unreclaimed`` — MUST be 0 after the drain: every abandoned page
+      flowed through the refcount/era path back to the free list.
+    """
+    cfg, params = build()
+    n_blocks = n_requests * (-(-(prompt_len + new_tokens) // block_size)) + 8
+    engine = ServeEngine(cfg, params, n_blocks=n_blocks,
+                         block_size=block_size, max_batch=4,
+                         scheme=scheme, chunk_size=chunk_size,
+                         era_freq=4, cleanup_freq=4)
+    tid = engine.pool.register_thread()
+    rng = np.random.default_rng(seed)
+
+    def prompts():
+        return [[1 + (i * 7 + j) % 31 for j in range(prompt_len)]
+                for i in range(n_requests)]
+
+    # warmup: compiles every shape bucket AND measures the service rate
+    t0 = time.perf_counter()
+    for p in prompts():
+        engine.submit(p, new_tokens)
+    engine.run(tid)
+    service_rate = n_requests / (time.perf_counter() - t0)
+    if arrival_rate is None:
+        arrival_rate = service_rate  # AT capacity: queues actually form
+
+    # Bresenham spread: floor((i+1)f) > floor(if) picks ~frac of indices
+    cancel_set = {i for i in range(n_requests)
+                  if int((i + 1) * cancel_frac) > int(i * cancel_frac)}
+    queued_set = {i for k, i in enumerate(sorted(cancel_set)) if k % 4 == 3}
+
+    def cancel_hook(req, index, tok, k=cancel_after):
+        if index + 1 >= k:  # runs under the scheduler lock (RLock): safe
+            engine.cancel(req)
+
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
+    reqs: list = []
+    done = threading.Event()
+
+    def feeder():
+        start = time.perf_counter()
+        for i, (p, at) in enumerate(zip(prompts(), arrivals)):
+            lag = start + at - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+            hook = cancel_hook if i in cancel_set \
+                and i not in queued_set else None
+            r = engine.submit(p, new_tokens, on_token=hook)
+            reqs.append(r)
+            if i in queued_set:  # cross-thread race against admission
+                engine.cancel(r)
+        done.set()
+
+    before = dict(engine.sched.stats)  # counters are cumulative
+    t0 = time.perf_counter()
+    th = threading.Thread(target=feeder, daemon=True)
+    th.start()
+    while (not done.is_set() or engine.sched.pending()
+           or engine.sched.active):
+        if not engine.step(tid):
+            engine.sched.wait_for_work(0.001)
+    th.join()
+    wall = time.perf_counter() - t0
+    unreclaimed = engine.drain(tid)
+    after = engine.sched.stats
+
+    survivors = [r for r in reqs if r.state == "done"]
+    assert all(r.done for r in survivors)
+    n_cancelled = after["cancelled"] - before["cancelled"]
+    wasted = after["cancelled_tokens"] - before["cancelled_tokens"]
+    total_generated = wasted + len(survivors) * new_tokens
+    out = latency_summary(survivors)
+    out.update({
+        "cancel_frac": cancel_frac, "cancel_after": cancel_after,
+        "arrival_rate": float(arrival_rate),
+        "service_rate": float(service_rate),
+        "scheme": scheme, "n_requests": n_requests,
+        "n_cancelled": n_cancelled,
+        "n_cancelled_queued": len(queued_set),
+        "cancelled_blocks": (after["cancelled_blocks"]
+                             - before["cancelled_blocks"]),
+        "wasted_tokens": wasted,
+        "wasted_frac": (wasted / total_generated if total_generated else 0.0),
+        "cancel_latency": _pct([r.cancel_latency for r in reqs
+                                if r.cancel_latency is not None]),
+        "unreclaimed": unreclaimed,
+        "tok_s": total_generated / wall,
+    })
+    print(f"\n### Cancellation: open-loop at {arrival_rate:.1f} req/s, "
+          f"{cancel_frac:.0%} of {n_requests} clients abandon after "
+          f"{cancel_after} tokens ({len(queued_set)} while queued) "
+          f"({scheme})")
+
+    def fmt(x, d=2):
+        return f"{x:.{d}f}" if x is not None else "-"
+
+    print(f"cancelled {n_cancelled} requests ({out['cancelled_blocks']} "
+          f"blocks released), wasted-tokens fraction "
+          f"{out['wasted_frac']:.2f} | cancel latency p50 "
+          f"{fmt(out['cancel_latency']['p50_ms'], 1)} p95 "
+          f"{fmt(out['cancel_latency']['p95_ms'], 1)} ms | "
+          f"unreclaimed {unreclaimed}")
+    ok = (unreclaimed == 0 and n_cancelled > 0
+          and 0.0 <= out["wasted_frac"] <= 1.0)
+    print(f"[{'PASS' if ok else 'FAIL'}: abandoned pages must reclaim "
+          f"through the refcount/era path]")
+    return out
+
+
 def run_smoke(chunk_size: int = 8) -> dict:
     """Seconds-scale CI smoke: tiny config, short prompts, same schema."""
     return {
@@ -775,6 +919,10 @@ def run_smoke(chunk_size: int = 8) -> dict:
         "open_loop": run_open_loop(
             n_requests=16, prompt_len=16, new_tokens=6,
             chunk_size=chunk_size, block_size=4),
+        "cancellation": run_cancellation(
+            cancel_frac=0.5, cancel_after=2, n_requests=12,
+            prompt_len=8, new_tokens=8, chunk_size=chunk_size,
+            block_size=4),
     }
 
 
@@ -803,11 +951,12 @@ def validate_results(results: dict) -> list:
     if results.get("schema") != "serve_bench/ttft_tpot/v1":
         errors.append(f"bad schema: {results.get('schema')!r}")
     present = [s for s in _TTFT_SCHEMA_MODES if s in results]
-    if not present and not any(s in results
-                               for s in ("scheme_matrix", "open_loop")):
+    if not present and not any(
+            s in results
+            for s in ("scheme_matrix", "open_loop", "cancellation")):
         errors.append("no scenario section "
                       f"({'/'.join(_TTFT_SCHEMA_MODES)}/scheme_matrix/"
-                      "open_loop)")
+                      "open_loop/cancellation)")
     for section in present:
         sec = results[section]
         for mode in _TTFT_SCHEMA_MODES[section]:
@@ -852,6 +1001,22 @@ def validate_results(results: dict) -> list:
                           "(the goodput gate would be vacuous)")
         if not isinstance(sec.get("ttft_slo_ms"), (int, float)):
             errors.append("open_loop: missing ttft_slo_ms")
+    if "cancellation" in results:
+        sec = results["cancellation"]
+        wf = sec.get("wasted_frac")
+        if not isinstance(wf, (int, float)) or not 0.0 <= wf <= 1.0:
+            errors.append(f"cancellation: wasted_frac = {wf!r} "
+                          "(must be numeric in [0, 1])")
+        if not sec.get("n_cancelled"):
+            errors.append("cancellation: n_cancelled == 0 (the scenario "
+                          "must actually abandon requests)")
+        elif not isinstance(sec.get("cancel_latency", {}).get("p50_ms"),
+                            (int, float)):
+            errors.append("cancellation: missing cancel_latency.p50_ms")
+        # machine-independent: every abandoned page must reclaim
+        if sec.get("unreclaimed") != 0:
+            errors.append(f"cancellation: unreclaimed = "
+                          f"{sec.get('unreclaimed')!r} (drain must reach 0)")
     if "scheme_matrix" in results:
         sec = results["scheme_matrix"]
         rows = sec.get("schemes")
@@ -1036,6 +1201,14 @@ def main(argv=None) -> int:
     ap.add_argument("--tpot-slo-ms", type=float, default=None,
                     help="absolute TPOT SLO target (default: 5x the "
                          "unloaded calibration p50)")
+    ap.add_argument("--cancel-frac", type=float, default=None,
+                    help="run the cancellation scenario: this fraction of "
+                         "open-loop arrivals abandon mid-flight (reports "
+                         "wasted-tokens fraction, cancel-latency "
+                         "percentiles, unreclaimed==0)")
+    ap.add_argument("--cancel-after", type=int, default=3,
+                    help="generated tokens before an abandoning client "
+                         "cancels (--cancel-frac scenario)")
     ap.add_argument("--scheme-matrix", action="store_true",
                     help="run the decode-path SMR scheme comparison "
                          "(every --schemes engine on one fixed workload; "
@@ -1068,7 +1241,10 @@ def main(argv=None) -> int:
               # some interactive request met its SLO, and the worst
               # per-token gap stayed measurable (decode kept moving)
               and results["open_loop"]["goodput_interactive"] > 0
-              and results["open_loop"]["gap"]["p95_ms"] is not None)
+              and results["open_loop"]["gap"]["p95_ms"] is not None
+              # abandoned pages must reclaim through the refcount/era path
+              and results["cancellation"]["unreclaimed"] == 0
+              and results["cancellation"]["n_cancelled"] > 0)
     elif args.prefill_heavy:
         results = {"schema": "serve_bench/ttft_tpot/v1"}
         results["prefill_heavy"] = run_prefill_heavy(
@@ -1095,6 +1271,17 @@ def main(argv=None) -> int:
             sched_policy=args.sched_policy,
             ttft_slo_ms=args.ttft_slo_ms, tpot_slo_ms=args.tpot_slo_ms)
         ok = results["open_loop"]["goodput_interactive"] > 0
+    elif args.cancel_frac is not None:
+        results = {"schema": "serve_bench/ttft_tpot/v1"}
+        results["cancellation"] = run_cancellation(
+            cancel_frac=args.cancel_frac, cancel_after=args.cancel_after,
+            arrival_rate=args.arrival_rate,
+            n_requests=args.requests or 16,
+            new_tokens=args.new_tokens or 16,
+            chunk_size=min(args.chunk_size, 8))
+        sec = results["cancellation"]
+        ok = (sec["unreclaimed"] == 0 and sec["n_cancelled"] > 0
+              and 0.0 <= sec["wasted_frac"] <= 1.0)
     elif args.scheme_matrix:
         results = {"schema": "serve_bench/ttft_tpot/v1"}
         results["scheme_matrix"] = run_scheme_matrix(

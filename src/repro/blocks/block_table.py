@@ -97,21 +97,30 @@ class BlockTableRef:
         self._ref.store(new)
         self._pool.retire_node(old, tid)
 
-    def release_all(self, tid: int) -> None:
-        """Release every block + retire the table (request finished/evicted).
+    def release_all(self, tid: int) -> int:
+        """Release every block + retire the table (request finished,
+        evicted, or cancelled).  Returns the number of references dropped.
 
         Blocks go through ``release_block`` — one sharer-reference drop
         each — so a block shared with the prefix cache (or another
         request's table) survives until its last sharer releases it, and
         that last release retires it exactly once.  Table-version nodes
-        are never shared; they retire directly.
+        are never shared; they retire directly.  This is the ONLY way
+        blocks leave a table — cancellation included: a client abandoning
+        a request mid-step must not force-retire pages an in-flight
+        dispatch's era reservation still covers, and the refcount/era
+        split makes force-retire unnecessary (refcounts decide logical
+        death, the era scan decides physical reuse).  Idempotent: a
+        second call sees the empty version and drops nothing.
         """
         old = self._ref.load()
+        blocks = old.blocks  # snapshot: retire_node may poison the payload
         empty = self._pool.alloc_node(TableVersion, tid, (), shard=self.shard)
         self._ref.store(empty)
-        for blk in old.blocks:
+        for blk in blocks:
             self._pool.release_block(blk, tid)
         self._pool.retire_node(old, tid)
+        return len(blocks)
 
     def __len__(self) -> int:
         cur = self._ref.load()

@@ -62,7 +62,7 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -75,7 +75,13 @@ __all__ = ["Request", "StepPlan", "Scheduler", "SLO_CLASSES"]
 STAT_KEYS = ("admitted", "completed", "evictions", "batch_evictions",
              "steps", "mixed_steps", "deadline_cutoffs", "reclaimed",
              "prefill_chunks", "prefill_tokens", "prefix_lookups",
-             "prefix_hits", "prefix_hit_tokens", "prefix_evictions")
+             "prefix_hits", "prefix_hit_tokens", "prefix_evictions",
+             "cancelled", "cancelled_tokens", "cancelled_blocks")
+
+#: pseudo worker id for stats written by non-worker threads (the serving
+#: edge calling ``cancel``); writes happen under the scheduler lock, so
+#: the single-writer discipline relaxes safely for this one dict
+EDGE_TID = -1
 
 #: per-request SLO classes: ``interactive`` requests are admitted first and
 #: never preempted on behalf of ``batch`` requests; ``batch`` requests are
@@ -91,11 +97,29 @@ class Request:
     generated: List[int] = field(default_factory=list)
     table: Optional[BlockTableRef] = None
     length: int = 0  # prefill cursor: tokens materialized in the cache
-    state: str = "queued"  # queued | active | done | evicted
+    state: str = "queued"  # queued | active | done | evicted | cancelled
     evictions: int = 0
     inflight: bool = False  # a device step for this request is outstanding
     shard: int = 0  # pool/device shard this request's pages live in
     slo: str = "interactive"  # SLO class: "interactive" | "batch"
+    # cancellation (client disconnect / DELETE): ``cancel`` sets the flag;
+    # the scheduler finalizes at the next safe point — immediately for a
+    # queued request, the next planning tick for an active one, and for an
+    # IN-FLIGHT one only after its dispatched step completes and releases
+    # its era reservation (blocks then flow through the normal
+    # refcount/era release path — never a force-retire)
+    cancelled: bool = False
+    t_cancel: Optional[float] = None  # when cancel() marked the flag
+    t_released: Optional[float] = None  # when the blocks were released
+    # streaming hooks (the serving front-end): both run UNDER the
+    # scheduler lock on a worker thread, so they must be O(1) handoffs
+    # (e.g. loop.call_soon_threadsafe into an asyncio queue).  on_token
+    # receives (request, token index, token id); an evicted request
+    # replays its tokens from index 0 on the re-run (greedy decode is
+    # deterministic), so consumers dedupe by index.  on_finish fires
+    # exactly once, when state becomes "done" or "cancelled".
+    on_token: Optional[Callable[["Request", int, int], None]] = None
+    on_finish: Optional[Callable[["Request"], None]] = None
     # one prefix-cache lookup per admission: a pressure-starved request
     # must not re-walk the deepest-match keys every tick (reset on
     # eviction rewind — the re-run is cache-eligible again)
@@ -142,6 +166,14 @@ class Request:
                 or len(self.generated) < 2:
             return None
         return (self.t_last - self.t_first) / (len(self.generated) - 1)
+
+    @property
+    def cancel_latency(self) -> Optional[float]:
+        """cancel() -> blocks released (the reclamation-visible latency:
+        how long an abandoned request kept its pages referenced)."""
+        if self.t_cancel is None or self.t_released is None:
+            return None
+        return self.t_released - self.t_cancel
 
 
 @dataclass
@@ -255,10 +287,13 @@ class Scheduler:
             return sum(len(q[c]) for q in self.queues for c in SLO_CLASSES)
 
     def submit(self, prompt: List[int], max_new_tokens: int,
-               slo: str = "interactive") -> Request:
+               slo: str = "interactive",
+               on_token: Optional[Callable] = None,
+               on_finish: Optional[Callable] = None) -> Request:
         if slo not in SLO_CLASSES:
             raise ValueError(f"slo {slo!r}: expected one of {SLO_CLASSES}")
-        req = Request(next(self._rid), list(prompt), max_new_tokens, slo=slo)
+        req = Request(next(self._rid), list(prompt), max_new_tokens, slo=slo,
+                      on_token=on_token, on_finish=on_finish)
         req.t_submit = time.monotonic()
         req.shard = req.rid % self.n_shards  # round-robin shard router
         with self._qlock:
@@ -266,6 +301,43 @@ class Scheduler:
         with self._work:
             self._work.notify_all()
         return req
+
+    # --------------------------------------------------------------- cancel
+    def cancel(self, req: Request) -> bool:
+        """Abandon ``req`` (client disconnect / DELETE).  Returns True iff
+        this call marked it (False: already finished or cancelled).
+
+        Callable from ANY thread — the serving edge included — so it only
+        MARKS; block release needs a registered SMR tid and happens on a
+        worker at the next safe point:
+
+        * queued: removed from its intake queue in place, finalized here
+          (a queued request owns no pages — eviction already released any,
+          so there is nothing to retire);
+        * active, no step outstanding: the next planning tick's sweep
+          (``_sweep_cancelled``) excludes it from the plan and releases
+          its table;
+        * active, IN FLIGHT: the dispatched step keeps its era
+          reservation until ``complete`` — finalization runs there, after
+          ``release_step``, so ``release_all`` never races the request's
+          own dispatch (and any OTHER in-flight step that snapshotted
+          these blocks is covered by its own reservation: retirement only
+          stamps ``retire_era``; the interval scan defers physical reuse).
+        """
+        with self._lock:
+            if req.cancelled or req.state in ("done", "cancelled"):
+                return False
+            req.cancelled = True
+            req.t_cancel = time.monotonic()
+            if req.state == "queued":
+                with self._qlock:
+                    try:
+                        self.queues[req.shard][req.slo].remove(req)
+                    except ValueError:  # pragma: no cover - defensive
+                        pass  # not queued after all; the sweep finalizes
+                self._finalize_cancelled(req, None, self._wstats(EDGE_TID))
+            self._work.notify_all()  # wake a worker to sweep/finish it
+            return True
 
     def wait_for_work(self, timeout: float) -> None:
         """Park until a step completes or a request arrives (idle workers)."""
@@ -282,11 +354,60 @@ class Scheduler:
         starting from the caller's affinity (``tid % n_shards``).
         """
         with self._lock:
+            # drop cancelled requests FIRST: rows excluded from this (and
+            # every later) plan, their pages released through the normal
+            # refcount/era path before any new allocation competes for them
+            self._sweep_cancelled(tid)
             for k in range(self.n_shards):
                 plan = self._tick_locked(tid, (tid + k) % self.n_shards)
                 if plan is not None:
                     return plan
             return None
+
+    def _sweep_cancelled(self, tid: int) -> None:
+        """Finalize every cancelled active request with no step outstanding
+        (caller holds the scheduler lock).  In-flight ones wait for their
+        ``complete`` — the era reservation of the dispatched step is still
+        live, and the completion path finalizes them right after releasing
+        it."""
+        stats = self._wstats(tid)
+        for req in [r for r in self.active
+                    if r.cancelled and not r.inflight]:
+            self._finalize_cancelled(req, tid, stats)
+
+    def _finalize_cancelled(self, req: Request, tid: Optional[int],
+                            stats: Dict[str, int]) -> None:
+        """Retire a cancelled request (caller holds the scheduler lock;
+        ``req`` must not be in flight).  ``tid is None`` only for QUEUED
+        requests, which own no pages (a fresh request has no table; an
+        evicted one already released everything on preemption) — every
+        other path runs on a worker with a registered SMR tid.
+
+        Salvage before release: whatever block-aligned prefix the request
+        fully materialized is immutable and cache-eligible — the insert
+        takes sharer references while the table's own references provably
+        pin the counts above zero, exactly like the completion-path
+        insert.  A later request with the same prompt prefix aliases those
+        pages instead of re-prefilling them, so cancelled work is not all
+        wasted work.
+        """
+        if req.table is not None and len(req.table) > 0:
+            assert tid is not None, "owned pages imply a worker finalizer"
+            if self.prefix_cache is not None:
+                materialized = min(req.length, len(req.prompt))
+                if materialized > 0:
+                    self.prefix_cache.insert(
+                        req.prompt[:materialized],
+                        req.table.current().blocks, tid, shard=req.shard)
+            stats["cancelled_blocks"] += req.table.release_all(tid)
+        req.state = "cancelled"
+        req.t_released = time.monotonic()
+        if req in self.active:
+            self.active.remove(req)
+        stats["cancelled"] += 1
+        stats["cancelled_tokens"] += len(req.generated)
+        if req.on_finish is not None:
+            req.on_finish(req)
 
     def _tick_locked(self, tid: int, shard: int) -> Optional[StepPlan]:
         stats = self._wstats(tid)
@@ -323,6 +444,9 @@ class Scheduler:
                     req = q["batch"].popleft()
                 else:
                     break
+            if req.cancelled:  # raced cancel's queue removal: drop, not admit
+                self._finalize_cancelled(req, tid, stats)
+                continue
             if req.table is None:
                 req.table = BlockTableRef(
                     self.pool, tid,
@@ -655,6 +779,14 @@ class Scheduler:
                     self._complete_decode(req, int(tok), tid, stats)
             self.pool.release_step(plan.slot, tid, shard=plan.shard)
             self._slots.append(plan.slot)
+            # cancelled rows finalize HERE — after release_step, so
+            # release_all never runs under this request's own dispatch
+            # (the ISSUE-9 ordering; any sibling step still naming these
+            # blocks holds its own reservation and the era scan defers
+            # physical reuse until it clears)
+            for req in plan.requests:
+                if req.cancelled and req.state == "active":
+                    self._finalize_cancelled(req, tid, stats)
             self._work.notify_all()  # freed a slot + un-inflighted requests
         # shard-clock merge rides on the step boundary (sharded pools)
         boundary = getattr(self.pool, "step_boundary", None)
@@ -673,8 +805,9 @@ class Scheduler:
         req.inflight = False
         req.length += 1
         # the step that consumed the last prompt token produces the first
-        # generated token
-        if req.length >= len(req.prompt):
+        # generated token; a cancelled row's sample is discarded (nobody
+        # is listening — complete() finalizes it after release_step)
+        if req.length >= len(req.prompt) and not req.cancelled:
             self._append_token(req, tok, tid, stats)
 
     def _complete_prefill(self, req: Request, n: int, tok: int, tid: int,
@@ -686,11 +819,16 @@ class Scheduler:
                 # register every block-aligned prefix of the now fully-
                 # materialized prompt — BEFORE the request can finish and
                 # release its references (the cache increments sharer
-                # counts while they are provably nonzero)
+                # counts while they are provably nonzero).  This runs for
+                # cancelled rows too: the scatter happened, the pages are
+                # immutable — the prefix outlives the client that paid
+                # for it (partial prefixes are salvaged by
+                # ``_finalize_cancelled`` the same way)
                 self.prefix_cache.insert(
                     req.prompt, req.table.current().blocks,
                     tid, shard=req.shard)
-            self._append_token(req, tok, tid, stats)
+            if not req.cancelled:
+                self._append_token(req, tok, tid, stats)
 
     def _append_token(self, req: Request, tok: int, tid: int,
                       stats: Dict[str, int]) -> None:
@@ -705,11 +843,17 @@ class Scheduler:
         req.t_last = now
         if req.t_first is None:
             req.t_first = now
+        if req.on_token is not None:
+            # streaming handoff (must be O(1) — we hold the scheduler
+            # lock); consumers dedupe by index across eviction replays
+            req.on_token(req, len(req.generated) - 1, tok)
         if req.done:
             req.state = "done"
             req.table.release_all(tid)
             self.active.remove(req)
             stats["completed"] += 1
+            if req.on_finish is not None:
+                req.on_finish(req)
 
     # --------------------------------------------------------------- evict
     def _pick_victim(self, exclude: Request,
@@ -737,7 +881,11 @@ class Scheduler:
         wrong slot range.
         """
         def evictable(req: Request) -> bool:
+            # a cancelled request is never a victim: the sweep is about to
+            # release everything it owns anyway, and eviction would requeue
+            # it as if it still had a client
             return (req.state == "active" and not req.inflight
+                    and not req.cancelled
                     and (shard is None or req.shard == shard))
 
         if exclude.slo == "interactive":

@@ -22,6 +22,11 @@ interactive ones; see docs/serving.md §Scheduling policy):
 
   PYTHONPATH=src python -m repro.launch.serve --slo mix --token-budget 24
   PYTHONPATH=src python -m repro.launch.serve --sched-policy prefill_first
+
+Streaming HTTP mode (asyncio SSE front-end with era-safe mid-flight
+cancellation; Ctrl-C runs the rolling drain — see docs/frontend.md):
+
+  PYTHONPATH=src python -m repro.launch.serve --http --port 8000 --workers 2
 """
 
 from __future__ import annotations
@@ -95,6 +100,16 @@ def main(argv=None) -> int:
                          "sharing a block-aligned prefix alias the same "
                          "pool pages; cached chunks cost zero prefill "
                          "dispatches)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP instead of running the synthetic "
+                         "batch: boots the asyncio SSE front-end "
+                         "(repro.serve.frontend) on --port with --workers "
+                         "persistent worker threads; Ctrl-C runs the "
+                         "rolling drain (see docs/frontend.md)")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="HTTP port for --http (0 = ephemeral)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="HTTP bind address for --http")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -120,6 +135,37 @@ def main(argv=None) -> int:
                          prefix_caching=not args.no_prefix_cache,
                          kv_dtype=args.kv_dtype,
                          **smr_kwargs)
+    if args.http:
+        import asyncio
+
+        from repro.serve import Frontend
+
+        runtime = ServeRuntime(engine, n_workers=max(2, args.workers),
+                               max_steps_per_worker=1_000_000)
+
+        async def _serve():
+            frontend = Frontend(runtime, host=args.host, port=args.port)
+            port = await frontend.start()
+            print(f"serving on http://{args.host}:{port} "
+                  f"(scheme={args.scheme}, shards={args.shards}, "
+                  f"{runtime.n_workers} workers; POST /v1/generate "
+                  f"streams SSE; Ctrl-C = rolling drain)")
+            try:
+                await frontend.serve_forever()
+            except (KeyboardInterrupt, asyncio.CancelledError):
+                pass
+            finally:
+                stats = await frontend.shutdown(deadline_s=10.0)
+                print(f"drained: unreclaimed={stats['unreclaimed']} "
+                      f"completed={stats['completed']} "
+                      f"cancelled={stats['cancelled']}")
+                assert stats["unreclaimed"] == 0, stats
+
+        try:
+            asyncio.run(_serve())
+        except KeyboardInterrupt:
+            pass
+        return 0
     if args.kv_dtype == "int8":
         print("kv_dtype=int8: pool pages are symmetric int8 codes + "
               "per-(block, kv-head) fp32 scales (fused in-kernel dequant)")

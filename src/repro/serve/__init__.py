@@ -1,8 +1,9 @@
 """Serving runtime: continuous batching over the WFE-reclaimed block pool."""
 
 from .engine import ServeEngine
+from .frontend import Frontend
 from .paged_model import paged_decode_step, paged_prefill_chunk
 from .runtime import ServeRuntime
 
-__all__ = ["ServeEngine", "ServeRuntime", "paged_decode_step",
+__all__ = ["ServeEngine", "ServeRuntime", "Frontend", "paged_decode_step",
            "paged_prefill_chunk"]

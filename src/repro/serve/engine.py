@@ -284,8 +284,16 @@ class ServeEngine:
         self._shard_pools[0] = value
 
     def submit(self, prompt: List[int], max_new_tokens: int,
-               slo: str = "interactive"):
-        return self.sched.submit(prompt, max_new_tokens, slo=slo)
+               slo: str = "interactive", on_token=None, on_finish=None):
+        return self.sched.submit(prompt, max_new_tokens, slo=slo,
+                                 on_token=on_token, on_finish=on_finish)
+
+    def cancel(self, req) -> bool:
+        """Abandon a request (client disconnect / DELETE): marks it; the
+        scheduler drops it at the next safe point and releases its pages
+        through the normal refcount/era path (see ``Scheduler.cancel``).
+        Callable from any thread.  Returns True iff this call marked it."""
+        return self.sched.cancel(req)
 
     def step(self, tid: int) -> bool:
         """One scheduler tick + device step.  Returns False when idle.
@@ -472,25 +480,34 @@ class ServeEngine:
 
     # ------------------------------------------------------------- run loops
     def run_worker(self, tid: int, max_steps: int = 10_000,
-                   stop: Optional[threading.Event] = None) -> int:
+                   stop: Optional[threading.Event] = None,
+                   exit_when_idle: bool = True) -> int:
         """Worker loop: step until the queue AND active set are empty.
 
         Used by every ``ServeRuntime`` worker thread; does NOT run the
         final drain (the runtime drains once after all workers join).
         ``stop`` aborts promptly (a sibling worker died — its in-flight
         requests would otherwise stall this loop until ``max_steps``).
+        ``exit_when_idle=False`` is the PERSISTENT mode for the serving
+        front-end: an empty queue parks the worker on the scheduler's
+        condition instead of exiting — new submissions (and cancellations)
+        wake it — until ``stop`` is set by the runtime's rolling drain.
         Returns the number of productive steps taken.
         """
         steps = 0
         productive = 0
         idle = 0
         while steps < max_steps and (stop is None or not stop.is_set()):
-            steps += 1
+            # persistent workers bound PRODUCTIVE steps only: a long-lived
+            # server parks through arbitrarily many idle wakeups without
+            # burning down its runaway backstop
+            steps = steps + 1 if exit_when_idle else productive
             if self.step(tid):
                 productive += 1
                 idle = 0
                 continue
-            if not self.sched.pending() and not self.sched.active:
+            if exit_when_idle and not self.sched.pending() \
+                    and not self.sched.active:
                 break
             # idle tick: another worker's steps are in flight, or blocks
             # need reclaiming before allocation can proceed.  The fused

@@ -20,6 +20,25 @@
   reclaims every retired block (provably terminating — see
   ``ServeEngine.drain``; no magic round counts).
 
+Two operating modes:
+
+* **batch** (``serve()``): run everything already submitted to
+  completion, then drain — the library mode every benchmark uses;
+* **persistent** (``start()`` / ``submit()`` / ``cancel()`` /
+  ``drain()``): workers park on the scheduler's condition when idle and
+  serve submissions as they arrive — the serving front-end's mode.
+  ``drain()`` is the ROLLING drain: it atomically closes admission
+  (``submit`` raises from that point on — see below), waits for in-flight
+  work to finish within an optional deadline, CANCELS whatever remains
+  past it (pages release through the refcount/era path, never a
+  force-retire), stops the workers, and runs the final reclamation drain.
+
+The ``submit``/``drain`` race: admission and drain-begin are serialized
+by one lock, so every submission either happens-before the drain (and is
+served or deadline-cancelled by it) or raises ``RuntimeError`` — a
+request can never slip in after the workers have decided to exit and
+strand silently, which is exactly what the pre-fix runtime did.
+
 The runtime enforces ``max_threads`` headroom at construction so every
 worker (and the drain) can register a tid; the wait-free scheme registry
 is per-shard-consistent (``ShardedBlockPool.register_thread``).
@@ -51,37 +70,51 @@ class ServeRuntime:
         # stall the survivors' idle loops until max_steps before the error
         # surfaced from serve()
         self._stop = threading.Event()
+        # persistent mode: the admission gate serializes submit() against
+        # drain-begin — once _draining is set under the gate, no submission
+        # can slip behind the exiting workers and strand
+        self._gate = threading.Lock()
+        self._draining = False
+        self._threads: List[threading.Thread] = []
 
     # ---------------------------------------------------------------- workers
-    def _worker(self, wid: int, tid: int, barrier: threading.Barrier) -> None:
+    def _worker(self, wid: int, tid: int, barrier: threading.Barrier,
+                exit_when_idle: bool = True) -> None:
         try:
             barrier.wait()  # start together: contention from step one
             self.worker_steps[wid] = self.engine.run_worker(
-                tid, self.max_steps_per_worker, stop=self._stop)
+                tid, self.max_steps_per_worker, stop=self._stop,
+                exit_when_idle=exit_when_idle)
         except BaseException as e:  # pragma: no cover - failure path
             self.errors.append(e)
             self._stop.set()  # abort the surviving workers promptly
 
-    def serve(self) -> Dict[str, object]:
-        """Run all submitted requests to completion; returns merged stats.
-
-        Spawns the workers, joins them once the queue and active set are
-        empty, then runs the final era-progress-bounded drain on one tid.
-        """
+    def _spawn(self, exit_when_idle: bool) -> List[threading.Thread]:
         engine = self.engine
-        self._stop.clear()  # fresh run; serve() may be called repeatedly
         if self._tids is None:  # one tid per worker, ever
             self._tids = [engine.pool.register_thread()
                           for _ in range(self.n_workers)]
         barrier = threading.Barrier(self.n_workers)
-        t0 = time.perf_counter()
         threads = [
-            threading.Thread(target=self._worker, args=(w, tid, barrier),
+            threading.Thread(target=self._worker,
+                             args=(w, tid, barrier, exit_when_idle),
                              name=f"serve-worker-{w}", daemon=True)
             for w, tid in enumerate(self._tids)
         ]
         for t in threads:
             t.start()
+        return threads
+
+    def serve(self) -> Dict[str, object]:
+        """Batch mode: run all submitted requests to completion; returns
+        merged stats.
+
+        Spawns the workers, joins them once the queue and active set are
+        empty, then runs the final era-progress-bounded drain on one tid.
+        """
+        self._stop.clear()  # fresh run; serve() may be called repeatedly
+        t0 = time.perf_counter()
+        threads = self._spawn(exit_when_idle=True)
         for t in threads:
             t.join()
         serve_dt = time.perf_counter() - t0  # tokens are all produced here
@@ -89,11 +122,105 @@ class ServeRuntime:
             raise self.errors[0]
         # graceful drain: all workers are quiescent, every step completed
         # and released its reservation — one bounded drain reclaims all
-        unreclaimed = engine.drain(self._tids[0])
-        dt = time.perf_counter() - t0
-        stats: Dict[str, object] = dict(engine.sched.stats)
+        unreclaimed = self.engine.drain(self._tids[0])
+        return self._stats(serve_dt, time.perf_counter() - t0, unreclaimed)
+
+    # ------------------------------------------------------- persistent mode
+    @property
+    def running(self) -> bool:
+        return any(t.is_alive() for t in self._threads)
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def start(self) -> "ServeRuntime":
+        """Spawn persistent workers: idle workers park on the scheduler's
+        condition and serve submissions as they arrive, until ``drain``."""
+        if self.running:
+            raise RuntimeError("ServeRuntime is already running")
+        with self._gate:
+            self._draining = False
+        self._stop.clear()
+        self._t0 = time.perf_counter()
+        self._threads = self._spawn(exit_when_idle=False)
+        return self
+
+    def submit(self, prompt, max_new_tokens: int, slo: str = "interactive",
+               on_token=None, on_finish=None):
+        """Admission-gated submit (persistent mode; also safe in batch
+        mode before ``serve``).  Raises once a drain has begun: the worker
+        fleet is exiting, so a request queued now would never be served —
+        rejecting loudly here is the fix for the silent-strand race."""
+        with self._gate:
+            if self._draining:
+                raise RuntimeError(
+                    "ServeRuntime is draining: submit rejected (the worker "
+                    "fleet is shutting down; a request queued now would "
+                    "never be served — retry against a restarted runtime)")
+            return self.engine.submit(prompt, max_new_tokens, slo=slo,
+                                      on_token=on_token, on_finish=on_finish)
+
+    def cancel(self, req) -> bool:
+        """Abandon a request; safe from any thread, draining included
+        (cancellation helps a drain converge, so it is never gated)."""
+        return self.engine.cancel(req)
+
+    def drain(self, deadline_s: Optional[float] = None,
+              poll_s: float = 0.002) -> Dict[str, object]:
+        """Rolling drain: close admission, let in-flight work finish
+        within ``deadline_s``, cancel what remains, stop the workers, and
+        run the final reclamation drain.  Returns merged stats (including
+        ``unreclaimed``, which MUST be 0 at a quiescent exit).
+
+        State machine: ``accepting -> draining`` (atomic with the
+        admission gate: every submit either happened-before this point or
+        raises) ``-> deadline-cancel`` (optional: past ``deadline_s``
+        every queued and active request is cancelled; queued ones finalize
+        in place, active ones at their next tick/completion — pages
+        release through the refcount/era path, never a force-retire)
+        ``-> workers joined -> reclamation drain``.
+        """
+        with self._gate:
+            already = self._draining
+            self._draining = True
+        if already and not self.running:
+            raise RuntimeError("ServeRuntime.drain: already drained")
+        sched = self.engine.sched
+        deadline = (None if deadline_s is None
+                    else time.monotonic() + deadline_s)
+        cancelled_at_deadline = 0
+        while (sched.pending() or sched.active) and not self._stop.is_set():
+            if deadline is not None and time.monotonic() > deadline:
+                # past the deadline: abandon everything still in the house;
+                # the workers keep ticking below, so every cancellation
+                # finalizes (in-flight rows at their step's completion)
+                for req in sched.queue + list(sched.active):
+                    if self.cancel(req):
+                        cancelled_at_deadline += 1
+                deadline = None  # cancel once; keep waiting for quiescence
+            time.sleep(poll_s)
+        self._stop.set()
+        with sched._work:  # wake parked workers to observe the stop
+            sched._work.notify_all()
+        for t in self._threads:
+            t.join()
+        self._threads = []
+        if self.errors:
+            raise self.errors[0]
+        serve_dt = time.perf_counter() - getattr(self, "_t0",
+                                                 time.perf_counter())
+        unreclaimed = self.engine.drain(self._tids[0])
+        stats = self._stats(serve_dt, serve_dt, unreclaimed)
+        stats["cancelled_at_deadline"] = cancelled_at_deadline
+        return stats
+
+    # ----------------------------------------------------------------- stats
+    def _stats(self, serve_dt: float, total_dt: float,
+               unreclaimed: int) -> Dict[str, object]:
+        stats: Dict[str, object] = dict(self.engine.sched.stats)
         stats["wall_s"] = serve_dt
-        stats["total_wall_s"] = dt
+        stats["total_wall_s"] = total_dt
         stats["unreclaimed"] = unreclaimed
         stats["n_workers"] = self.n_workers
         stats["worker_steps"] = list(self.worker_steps)
