@@ -242,6 +242,53 @@ def check(fresh: dict, baseline: dict, tolerance: float) -> list:
                      else "-")
                   + " (latency informational, not gated)")
 
+    # fault-tolerance gates, all on the FRESH results (the section only
+    # exists in JSONs produced since the crash-tolerance work — an older
+    # committed baseline without it neither gates nor fails, the
+    # scheme_matrix precedent).  All machine-independent:
+    #   n_respawns > 0 — the supervisor must actually recover a crashed
+    #     worker (a vacuous run must not green-light the gate);
+    #   completed_despite_faults == 1.0 — every request completes
+    #     exactly once; crash-requeued rows replay, none are lost;
+    #   token_exact — survivors match the fault-free greedy reference;
+    #   unreclaimed == 0 — reaping the dead tids unpinned every era
+    #     reservation they held.
+    # Recovery latency is informational: it measures crash-detected ->
+    # the replacement worker's first productive step, which is dominated
+    # by thread spawn + poll interval on a shared runner.
+    ft = fresh.get("fault_tolerance")
+    if ft is not None:
+        for name, row in sorted(ft.get("schemes", {}).items()):
+            if not row.get("n_respawns"):
+                failures.append(
+                    f"fault_tolerance.{name}.n_respawns = 0: the "
+                    f"supervisor never recovered a crashed worker")
+            cdf = row.get("completed_despite_faults")
+            if cdf != 1.0:
+                failures.append(
+                    f"fault_tolerance.{name}.completed_despite_faults = "
+                    f"{cdf!r}: every request must complete exactly once "
+                    f"despite injected crashes")
+            if not row.get("token_exact"):
+                failures.append(
+                    f"fault_tolerance.{name}: crash-requeued requests "
+                    f"replayed differently from the fault-free reference")
+            left = row.get("unreclaimed")
+            if left != 0:
+                failures.append(
+                    f"fault_tolerance.{name}.unreclaimed = {left!r}: "
+                    f"reaping dead tids must unpin every era reservation")
+        n_rows = len(ft.get("schemes", {}))
+        if n_rows:
+            lats = [r.get("recovery_latency", {}).get("p50_ms")
+                    for r in ft["schemes"].values()]
+            lats = [x for x in lats if isinstance(x, (int, float))]
+            print(f"fault tolerance: {ft.get('total_crashes')} injected "
+                  f"crashes over {n_rows} scheme(s), all requests "
+                  f"completed token-exact; recovery p50 "
+                  + (f"{max(lats):.1f} ms worst-scheme" if lats else "-")
+                  + " (informational, not gated)")
+
     # open-loop goodput gate: interactive-class requests must keep
     # meeting their SLO under Poisson arrival pressure.  The invariant
     # (goodput_interactive > 0 with interactive arrivals present) is

@@ -103,7 +103,8 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
-from repro.serve import ServeEngine, ServeRuntime
+from repro.serve import (FaultInjector, FaultSpec, ServeEngine,
+                         ServeRuntime)
 
 
 def _build_base(arch: str = "stablelm-3b"):
@@ -891,6 +892,135 @@ def run_cancellation(cancel_frac: float = 0.5, cancel_after: int = 3,
     return out
 
 
+# ------------------------------------------------- fault-tolerance scenario
+def run_fault_tolerance(schemes=("WFE", "Crystalline", "HE", "EBR",
+                                 "2GEIBR"),
+                        fault_rate: float = None, seed: int = 0,
+                        n_requests: int = 10, new_tokens: int = 6,
+                        chunk_size: int = 8, n_workers: int = 2,
+                        build=_build_base) -> dict:
+    """Chaos scenario: seeded worker crashes under the supervised runtime.
+
+    Every scheme's engine runs the same workload with the fault injector
+    armed: one deterministic crash per named crash point (before_tick /
+    after_reservation / after_dispatch — at least 3 crashes per scheme),
+    plus an optional ``fault_rate`` of extra per-event crashes drawn from
+    the seeded per-site streams (``--fault-rate``).  The supervisor must
+    reap each dead tid's era reservation, requeue its in-flight rows
+    through the eviction-rewind path, and respawn a replacement on a
+    fresh tid.
+
+    Reports per scheme (definitions in docs/robustness.md):
+
+    * ``completed_despite_faults`` — completed / submitted: MUST be 1.0
+      (crash-requeued requests replay to completion, none lost or
+      double-finished);
+    * ``token_exact`` — survivors' generated tokens match a fault-free
+      single-worker reference run (greedy decode replays exactly);
+    * ``recovery_latency`` — percentiles of crash-detected -> the
+      replacement worker's first productive step;
+    * ``crash_wasted_frac`` — tokens generated then discarded by the
+      requeue rewind / all generated tokens (the compute a crash costs);
+    * ``unreclaimed`` — MUST be 0 after the drain: reaping the dead tids
+      unpinned every era reservation they held.
+    """
+    cfg, params = build()
+
+    def prompts():
+        return [[1 + (i * 7 + j) % 29 for j in range(1 + i % 5)]
+                for i in range(n_requests)]
+
+    def make_engine(scheme):
+        # max_threads: workers + supervisor + one fresh tid per respawn
+        return ServeEngine(cfg, params, n_blocks=64, block_size=4,
+                           max_batch=4, scheme=scheme,
+                           chunk_size=min(chunk_size, 8), max_threads=16,
+                           max_inflight=4, era_freq=2, cleanup_freq=2)
+
+    # fault-free greedy reference (tokens are scheme-independent: the SMR
+    # layer never touches sampling)
+    ref_engine = make_engine(schemes[0])
+    ref_reqs = [ref_engine.submit(p, new_tokens) for p in prompts()]
+    ref_engine.run(ref_engine.pool.register_thread())
+    reference = [list(r.generated) for r in ref_reqs]
+
+    # one deterministic crash per point (the >= 3 floor the CI gate
+    # needs), plus the rate-drawn chaos stream when --fault-rate is set
+    spec_kw = dict(seed=seed, crash_at=(
+        ("before_tick", 2), ("after_reservation", 1), ("after_dispatch", 3)))
+    if fault_rate:
+        spec_kw.update(crash_rate=fault_rate, max_crashes=6)
+
+    rows: dict = {}
+    print(f"\n### Fault tolerance: 3 seeded crashes/scheme"
+          + (f" + crash_rate={fault_rate}" if fault_rate else "")
+          + f", {n_workers} workers, {n_requests} requests")
+    print(f"{'scheme':>12s} {'crashes':>8s} {'respawns':>9s} "
+          f"{'completed':>10s} {'exact':>6s} {'recov p50':>10s} "
+          f"{'wasted':>7s} {'unreclaimed':>12s}")
+    for scheme in schemes:
+        engine = make_engine(scheme)
+        inj = FaultInjector(FaultSpec(**spec_kw))
+        engine.set_fault_injector(inj)
+        reqs = [engine.submit(p, new_tokens) for p in prompts()]
+        runtime = ServeRuntime(engine, n_workers=n_workers)
+        t0 = time.perf_counter()
+        stats = runtime.serve()
+        wall = time.perf_counter() - t0
+        survivors = [r for r in reqs if r.state == "done"]
+        token_exact = all(list(r.generated) == want
+                          for r, want in zip(reqs, reference)
+                          if r.state == "done")
+        wasted = stats.get("crash_wasted_tokens", 0)
+        total_generated = wasted + sum(len(r.generated) for r in survivors)
+        recovery = _pct(runtime.recovery_latencies)
+        row = {
+            "scheme": scheme,
+            "n_crashes": inj.n_crashes,
+            "crashes_by_point": dict(inj.crashes),
+            "n_respawns": runtime.n_respawns,
+            "completed": stats["completed"],
+            "failed": stats.get("failed", 0),
+            "completed_despite_faults": (
+                stats["completed"] / n_requests if n_requests else 0.0),
+            "token_exact": bool(token_exact),
+            "recovery_latency": recovery,
+            "crash_requeues": stats.get("crash_requeues", 0),
+            "crash_wasted_tokens": wasted,
+            "crash_wasted_frac": (wasted / total_generated
+                                  if total_generated else 0.0),
+            "unreclaimed": stats["unreclaimed"],
+            "tok_s": total_generated / wall,
+        }
+        rows[scheme] = row
+        p50 = recovery["p50_ms"]
+        print(f"{scheme:>12s} {row['n_crashes']:>8d} "
+              f"{row['n_respawns']:>9d} "
+              f"{row['completed']:>6d}/{n_requests:<3d} "
+              f"{'yes' if token_exact else 'NO':>6s} "
+              f"{'-' if p50 is None else f'{p50:.1f} ms':>10s} "
+              f"{row['crash_wasted_frac']:>7.2f} "
+              f"{row['unreclaimed']:>12d}")
+    total_crashes = sum(r["n_crashes"] for r in rows.values())
+    ok = (total_crashes >= 3 * len(schemes)
+          and all(r["n_respawns"] > 0
+                  and r["completed_despite_faults"] == 1.0
+                  and r["token_exact"] and r["unreclaimed"] == 0
+                  for r in rows.values()))
+    print(f"[{'PASS' if ok else 'FAIL'}: every request completes despite "
+          f"{total_crashes} injected crashes, survivors token-exact, "
+          f"post-drain unreclaimed == 0]")
+    return {
+        "schemes": rows,
+        "n_requests": n_requests,
+        "new_tokens": new_tokens,
+        "n_workers": n_workers,
+        "fault_rate": fault_rate,
+        "seed": seed,
+        "total_crashes": total_crashes,
+    }
+
+
 def run_smoke(chunk_size: int = 8) -> dict:
     """Seconds-scale CI smoke: tiny config, short prompts, same schema."""
     return {
@@ -923,6 +1053,12 @@ def run_smoke(chunk_size: int = 8) -> dict:
             cancel_frac=0.5, cancel_after=2, n_requests=12,
             prompt_len=8, new_tokens=8, chunk_size=chunk_size,
             block_size=4),
+        # two schemes in smoke (one per reap specialization: WFE's
+        # slow-path cancel + the shared end_op path); --fault-rate runs
+        # the full five-scheme matrix
+        "fault_tolerance": run_fault_tolerance(
+            schemes=("WFE", "EBR"), n_requests=8, new_tokens=5,
+            chunk_size=chunk_size),
     }
 
 
@@ -953,10 +1089,11 @@ def validate_results(results: dict) -> list:
     present = [s for s in _TTFT_SCHEMA_MODES if s in results]
     if not present and not any(
             s in results
-            for s in ("scheme_matrix", "open_loop", "cancellation")):
+            for s in ("scheme_matrix", "open_loop", "cancellation",
+                      "fault_tolerance")):
         errors.append("no scenario section "
                       f"({'/'.join(_TTFT_SCHEMA_MODES)}/scheme_matrix/"
-                      "open_loop/cancellation)")
+                      "open_loop/cancellation/fault_tolerance)")
     for section in present:
         sec = results[section]
         for mode in _TTFT_SCHEMA_MODES[section]:
@@ -1017,6 +1154,45 @@ def validate_results(results: dict) -> list:
         if sec.get("unreclaimed") != 0:
             errors.append(f"cancellation: unreclaimed = "
                           f"{sec.get('unreclaimed')!r} (drain must reach 0)")
+    if "fault_tolerance" in results:
+        sec = results["fault_tolerance"]
+        rows = sec.get("schemes")
+        if not isinstance(rows, dict) or not rows:
+            errors.append("fault_tolerance: missing schemes table")
+            rows = {}
+        for name, row in rows.items():
+            # the scenario must actually crash workers and recover them
+            if row.get("n_crashes", 0) < 3:
+                errors.append(f"fault_tolerance.{name}: n_crashes = "
+                              f"{row.get('n_crashes')!r} (< 3 — one "
+                              "seeded crash per crash point is the floor)")
+            if not row.get("n_respawns"):
+                errors.append(f"fault_tolerance.{name}: n_respawns == 0 "
+                              "(the supervisor never recovered a worker)")
+            cdf = row.get("completed_despite_faults")
+            if cdf != 1.0:
+                errors.append(f"fault_tolerance.{name}: "
+                              f"completed_despite_faults = {cdf!r} "
+                              "(every request must complete exactly once)")
+            if not row.get("token_exact"):
+                errors.append(f"fault_tolerance.{name}: crash-requeued "
+                              "requests replayed differently from the "
+                              "fault-free reference")
+            wf = row.get("crash_wasted_frac")
+            if not isinstance(wf, (int, float)) or not 0.0 <= wf <= 1.0:
+                errors.append(f"fault_tolerance.{name}: crash_wasted_frac "
+                              f"= {wf!r} (must be numeric in [0, 1])")
+            # recovery latency is informational (machine-dependent) but
+            # the percentile block must be present and well-formed
+            rl = row.get("recovery_latency")
+            if not isinstance(rl, dict) or "p50_ms" not in rl:
+                errors.append(f"fault_tolerance.{name}: missing "
+                              "recovery_latency.p50_ms")
+            # machine-independent: reaping dead tids must unpin every era
+            if row.get("unreclaimed") != 0:
+                errors.append(f"fault_tolerance.{name}: unreclaimed = "
+                              f"{row.get('unreclaimed')!r} "
+                              "(drain must reach 0)")
     if "scheme_matrix" in results:
         sec = results["scheme_matrix"]
         rows = sec.get("schemes")
@@ -1209,6 +1385,16 @@ def main(argv=None) -> int:
     ap.add_argument("--cancel-after", type=int, default=3,
                     help="generated tokens before an abandoning client "
                          "cancels (--cancel-frac scenario)")
+    ap.add_argument("--fault-rate", type=float, default=None,
+                    help="run the fault-tolerance chaos scenario: every "
+                         "--schemes engine gets 3 deterministic seeded "
+                         "worker crashes (one per crash point) plus this "
+                         "per-event crash rate; gates completed-despite-"
+                         "faults == 1.0, token exactness, n_respawns > 0, "
+                         "unreclaimed == 0 (0.0 = deterministic crashes "
+                         "only)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the --fault-rate per-site fault streams")
     ap.add_argument("--scheme-matrix", action="store_true",
                     help="run the decode-path SMR scheme comparison "
                          "(every --schemes engine on one fixed workload; "
@@ -1244,7 +1430,14 @@ def main(argv=None) -> int:
               and results["open_loop"]["gap"]["p95_ms"] is not None
               # abandoned pages must reclaim through the refcount/era path
               and results["cancellation"]["unreclaimed"] == 0
-              and results["cancellation"]["n_cancelled"] > 0)
+              and results["cancellation"]["n_cancelled"] > 0
+              # crashed workers must be reaped + respawned, every request
+              # completing exactly once with fault-free tokens
+              and all(r["unreclaimed"] == 0 and r["n_respawns"] > 0
+                      and r["completed_despite_faults"] == 1.0
+                      and r["token_exact"]
+                      for r in results["fault_tolerance"]
+                                      ["schemes"].values()))
     elif args.prefill_heavy:
         results = {"schema": "serve_bench/ttft_tpot/v1"}
         results["prefill_heavy"] = run_prefill_heavy(
@@ -1282,6 +1475,19 @@ def main(argv=None) -> int:
         sec = results["cancellation"]
         ok = (sec["unreclaimed"] == 0 and sec["n_cancelled"] > 0
               and 0.0 <= sec["wasted_frac"] <= 1.0)
+    elif args.fault_rate is not None:
+        results = {"schema": "serve_bench/ttft_tpot/v1"}
+        results["fault_tolerance"] = run_fault_tolerance(
+            schemes=tuple(args.schemes), fault_rate=args.fault_rate or None,
+            seed=args.fault_seed, n_requests=args.requests or 10,
+            new_tokens=args.new_tokens or 6,
+            chunk_size=min(args.chunk_size, 8))
+        ft = results["fault_tolerance"]
+        ok = (ft["total_crashes"] >= 3 * len(ft["schemes"])
+              and all(r["n_respawns"] > 0 and r["unreclaimed"] == 0
+                      and r["completed_despite_faults"] == 1.0
+                      and r["token_exact"]
+                      for r in ft["schemes"].values()))
     elif args.scheme_matrix:
         results = {"schema": "serve_bench/ttft_tpot/v1"}
         results["scheme_matrix"] = run_scheme_matrix(

@@ -150,6 +150,9 @@ class BlockPool:
         # step-epoch anchor: one reservation protects a whole dispatched step
         self._epoch_ref = AtomicRef(_EpochNode())
         self._epoch_view = PtrView(self._epoch_ref)
+        # fault-injection gate for alloc_blocks (serve/faults.py): called
+        # as hook(n, tid), may raise PoolExhausted.  None = disabled.
+        self._fault_alloc: Optional[Callable[[int, int], None]] = None
 
     # ---------------------------------------------------------- threads
     def register_thread(self) -> int:
@@ -177,6 +180,10 @@ class BlockPool:
         raised — the scheduler then evicts and retries, or shrinks the
         chunk to the pages the request already owns.
         """
+        if self._fault_alloc is not None:
+            # injected failure surfaces as an ordinary exhaustion, so the
+            # caller's recovery ladder (evict / shrink chunk) is exercised
+            self._fault_alloc(n, tid)
         idxs: List[int] = []
         for _ in range(n):
             idx = self._free.pop()
@@ -275,6 +282,17 @@ class BlockPool:
             row.store(INF_ERA)
         else:  # HP-style pointer slot
             row.store(None)
+
+    def reap_thread(self, tid: int) -> None:
+        """Clear a DEAD (joined) worker's reservations so reclamation can
+        proceed without it (crash tolerance, docs/robustness.md).
+
+        Must only be called after the thread is joined: the safety
+        argument (docs/schemes.md, next to Theorem 4) rests entirely on
+        the dead tid never publishing or dereferencing again.  The tid is
+        quarantined by the caller — it is never handed to another worker.
+        """
+        self.smr.reap_thread(tid)
 
     # ---------------------------------------------------------- reclamation
     def cleanup(self, tid: int, *, shard: Optional[int] = None,

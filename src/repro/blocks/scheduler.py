@@ -76,7 +76,9 @@ STAT_KEYS = ("admitted", "completed", "evictions", "batch_evictions",
              "steps", "mixed_steps", "deadline_cutoffs", "reclaimed",
              "prefill_chunks", "prefill_tokens", "prefix_lookups",
              "prefix_hits", "prefix_hit_tokens", "prefix_evictions",
-             "cancelled", "cancelled_tokens", "cancelled_blocks")
+             "cancelled", "cancelled_tokens", "cancelled_blocks",
+             "failed", "failed_tokens",
+             "crash_requeues", "crash_wasted_tokens")
 
 #: pseudo worker id for stats written by non-worker threads (the serving
 #: edge calling ``cancel``); writes happen under the scheduler lock, so
@@ -98,6 +100,7 @@ class Request:
     table: Optional[BlockTableRef] = None
     length: int = 0  # prefill cursor: tokens materialized in the cache
     state: str = "queued"  # queued | active | done | evicted | cancelled
+    #                      # | failed (non-finite sampled output: terminal)
     evictions: int = 0
     inflight: bool = False  # a device step for this request is outstanding
     shard: int = 0  # pool/device shard this request's pages live in
@@ -111,13 +114,19 @@ class Request:
     cancelled: bool = False
     t_cancel: Optional[float] = None  # when cancel() marked the flag
     t_released: Optional[float] = None  # when the blocks were released
+    # graceful degradation (ISSUE-10): a non-finite sampled output marks
+    # the ROW's request ``failing`` during complete(); finalization to the
+    # terminal "failed" state runs after release_step, exactly like a
+    # cancelled in-flight row (the generated-so-far KV may be poisoned,
+    # so — unlike cancellation — nothing is salvaged into the prefix cache)
+    failing: bool = False
     # streaming hooks (the serving front-end): both run UNDER the
     # scheduler lock on a worker thread, so they must be O(1) handoffs
     # (e.g. loop.call_soon_threadsafe into an asyncio queue).  on_token
     # receives (request, token index, token id); an evicted request
     # replays its tokens from index 0 on the re-run (greedy decode is
     # deterministic), so consumers dedupe by index.  on_finish fires
-    # exactly once, when state becomes "done" or "cancelled".
+    # exactly once, when state becomes "done", "cancelled" or "failed".
     on_token: Optional[Callable[["Request", int, int], None]] = None
     on_finish: Optional[Callable[["Request"], None]] = None
     # one prefix-cache lookup per admission: a pressure-starved request
@@ -325,7 +334,7 @@ class Scheduler:
           stamps ``retire_era``; the interval scan defers physical reuse).
         """
         with self._lock:
-            if req.cancelled or req.state in ("done", "cancelled"):
+            if req.cancelled or req.state in ("done", "cancelled", "failed"):
                 return False
             req.cancelled = True
             req.t_cancel = time.monotonic()
@@ -408,6 +417,63 @@ class Scheduler:
         stats["cancelled_tokens"] += len(req.generated)
         if req.on_finish is not None:
             req.on_finish(req)
+
+    def _finalize_failed(self, req: Request, tid: int,
+                         stats: Dict[str, int]) -> None:
+        """Terminal failure of ONE request (non-finite sampled output) —
+        the batch's other rows are untouched.  Caller holds the scheduler
+        lock; ``req`` is not in flight (its step completed and released
+        its reservation).  Unlike cancellation, NOTHING is salvaged into
+        the prefix cache: a poisoned logit means the request's KV pages
+        are suspect, and a cache insert would hand them to future readers.
+        The pages release through the ordinary refcount/era path.
+        """
+        if req.table is not None and len(req.table) > 0:
+            req.table.release_all(tid)
+        req.state = "failed"
+        req.t_released = time.monotonic()
+        if req in self.active:
+            self.active.remove(req)
+        stats["failed"] += 1
+        stats["failed_tokens"] += len(req.generated)
+        if req.on_finish is not None:
+            req.on_finish(req)
+
+    # ------------------------------------------------------ crash recovery
+    def requeue_crashed(self, plan: StepPlan, tid: int) -> None:
+        """Rewind a DEAD worker's orphaned plan (supervisor path,
+        docs/robustness.md).  ``tid`` is the SUPERVISOR's registered tid —
+        the dead worker's tid is already quarantined.
+
+        The dead worker stopped somewhere between publishing the plan's
+        era reservation and calling ``complete``; either way no device
+        read is still in flight (dispatches are synchronous — the worker
+        blocked in ``np.asarray`` until the step finished, or never
+        dispatched at all).  Each non-cancelled row rewinds through the
+        ordinary eviction path: pages release via refcount/era (never a
+        force-retire), the prefill cursor and generated tokens reset, and
+        the request requeues at the HEAD of its intake queue — greedy
+        decode is deterministic, so the replay is token-identical.
+        Cancelled rows finalize instead (their client already left).  The
+        plan's in-flight slot returns to the pool; its era reservation is
+        cleared separately by ``reap_thread`` (caller runs reap FIRST so
+        the evictions' cleanup can free the released pages immediately).
+        """
+        stats = self._wstats(tid)
+        with self._lock:
+            for req in plan.requests:
+                if not req.inflight:
+                    continue  # defensive: the plan completed after all
+                req.inflight = False
+                if req.cancelled:
+                    self._finalize_cancelled(req, tid, stats)
+                elif req.state == "active":
+                    stats["crash_requeues"] += 1
+                    stats["crash_wasted_tokens"] += len(req.generated)
+                    self._evict(req, tid)
+            if plan.slot not in self._slots:
+                self._slots.append(plan.slot)
+            self._work.notify_all()
 
     def _tick_locked(self, tid: int, shard: int) -> Optional[StepPlan]:
         stats = self._wstats(tid)
@@ -753,21 +819,41 @@ class Scheduler:
                         n_decode=len(runnable), chunk_lens=chunk_lens)
 
     # --------------------------------------------------------------- complete
-    def complete(self, plan: StepPlan, sampled: np.ndarray, tid: int) -> None:
+    def complete(self, plan: StepPlan, sampled: np.ndarray, tid: int,
+                 failed_rows: Optional[List[bool]] = None) -> None:
         """Account one finished device step; release its reservation.
 
         ``sampled`` holds one token per plan ROW — for prefill rows it is
         the argmax of the chunk's last valid position, consumed only by
         the chunk that materializes the final prompt token (it IS the
         first generated token); earlier chunks' samples are discarded.
+
+        ``failed_rows`` (engine finite-check / fault injection) flags rows
+        whose sampled output was non-finite: their accounting is skipped —
+        the garbage token must not enter ``generated`` — and the request
+        finalizes to the terminal ``failed`` state after ``release_step``,
+        through the same post-reservation ordering as a cancelled
+        in-flight row.
         """
         stats = self._wstats(tid)
+        failed_rids = set()
+        if failed_rows is not None:
+            failed_rids = {req.rid for req, bad
+                           in zip(plan.requests, failed_rows) if bad}
         with self._lock:
+            if failed_rids:
+                for req in plan.requests:
+                    if req.rid in failed_rids:
+                        req.inflight = False  # its step DID complete
+                        req.failing = True
             if plan.kind == "prefill":
-                self._complete_prefill(plan.requests[0], plan.n_tokens,
-                                       int(sampled[0]), tid, stats)
+                if plan.requests[0].rid not in failed_rids:
+                    self._complete_prefill(plan.requests[0], plan.n_tokens,
+                                           int(sampled[0]), tid, stats)
             elif plan.kind == "mixed":
                 for i, req in enumerate(plan.requests):
+                    if req.rid in failed_rids:
+                        continue
                     if i < plan.n_decode:
                         self._complete_decode(req, int(sampled[i]), tid,
                                               stats)
@@ -776,10 +862,11 @@ class Scheduler:
                                                int(sampled[i]), tid, stats)
             else:
                 for req, tok in zip(plan.requests, sampled):
-                    self._complete_decode(req, int(tok), tid, stats)
+                    if req.rid not in failed_rids:
+                        self._complete_decode(req, int(tok), tid, stats)
             self.pool.release_step(plan.slot, tid, shard=plan.shard)
             self._slots.append(plan.slot)
-            # cancelled rows finalize HERE — after release_step, so
+            # cancelled/failed rows finalize HERE — after release_step, so
             # release_all never runs under this request's own dispatch
             # (the ISSUE-9 ordering; any sibling step still naming these
             # blocks holds its own reservation and the era scan defers
@@ -787,6 +874,8 @@ class Scheduler:
             for req in plan.requests:
                 if req.cancelled and req.state == "active":
                     self._finalize_cancelled(req, tid, stats)
+                elif req.failing and req.state == "active":
+                    self._finalize_failed(req, tid, stats)
             self._work.notify_all()  # freed a slot + un-inflighted requests
         # shard-clock merge rides on the step boundary (sharded pools)
         boundary = getattr(self.pool, "step_boundary", None)

@@ -185,6 +185,12 @@ class ShardedBlockPool:
         for p in self.shards:
             p.release_step(slot, tid)
 
+    def reap_thread(self, tid: int) -> None:
+        """Clear a dead (joined) worker's reservations in EVERY shard —
+        registration spans all shards, so reaping must too."""
+        for p in self.shards:
+            p.reap_thread(tid)
+
     # ---------------------------------------------------------- era merge
     def step_boundary(self, tid: int) -> None:
         """Periodic max-merge of the shard clocks (call once per step).

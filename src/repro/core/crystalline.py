@@ -160,6 +160,17 @@ class Crystalline(WFE):
         for tid in range(self.max_threads):
             self.seal(tid)
 
+    def reap_thread(self, tid: int) -> None:
+        # WFE's reap (cancel orphaned slow-path requests, sweep all
+        # reservation slots) plus sealing the dead thread's open batch:
+        # no owner retire will ever complete it, and an unsealed batch is
+        # invisible to the scan — without the seal up to batch_size - 1
+        # blocks would leak.  Cross-thread seal is already safe (the
+        # pending lock exists for the fleet drain); after join it cannot
+        # even race the owner.
+        super().reap_thread(tid)
+        self.seal(tid)
+
     # -- reclamation -----------------------------------------------------------
     def can_delete(self, blk: Block, js: int, je: int) -> bool:
         # Scalar reference path: scan the BATCH interval.  The batched

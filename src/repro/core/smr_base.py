@@ -99,6 +99,16 @@ class SMRScheme:
             )
         return tid
 
+    @property
+    def registered_threads(self) -> int:
+        """How many tids have been handed out (caps at ``max_threads``).
+
+        The supervisor uses ``max_threads - registered_threads`` as the
+        respawn headroom: quarantined tids are never reused, so each
+        replacement worker consumes a fresh registration.
+        """
+        return min(self._next_tid, self.max_threads)
+
     # -- core API (paper §2.3) ----------------------------------------------
     def alloc_block(self, cls: Type[Block], tid: int, *args: Any, **kwargs: Any) -> Block:
         raise NotImplementedError
@@ -132,6 +142,32 @@ class SMRScheme:
 
     def end_op(self, tid: int) -> None:
         self.clear(tid)
+
+    def reap_thread(self, tid: int) -> None:
+        """Clear every reservation a DEAD thread left published.
+
+        Crash tolerance (docs/robustness.md): a thread that dies holding
+        a reservation blocks reclamation forever — no ``release_step``
+        will ever run on its behalf.  The supervisor calls this only
+        after ``Thread.join()`` returns, which is the entire safety
+        argument (reap-after-join, stated next to Theorem 4 in
+        docs/schemes.md): a joined thread can never again publish,
+        dereference, or retire on this tid, and clearing ITS reservations
+        cannot un-protect a page any live reader holds, because every
+        reader protects pages through its own per-tid slots.
+
+        The default — closing the operation bracket — is exactly the
+        quiescent state for every scheme without extra per-thread
+        protocol state: EBR announces ``_QUIESCENT``, 2GEIBR stores the
+        infinite interval, HE's ``end_op`` routes to ``clear`` which
+        writes ``INF_ERA`` into all slots.  WFE overrides to also cancel
+        orphaned slow-path requests (the helping protocol's counters must
+        stay balanced) and to clear its two special transfer slots.  The
+        dead tid's retire list needs no special handling: the batched
+        scan is reader-agnostic, so any live thread's
+        ``cleanup_batch_all`` drains it.
+        """
+        self.end_op(tid)
 
     # -- reclamation --------------------------------------------------------
     def free(self, blk: Block, tid: int) -> None:

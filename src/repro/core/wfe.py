@@ -277,6 +277,47 @@ class WFE(SMRScheme):
         for j in range(self.max_hes):
             self.reservations[tid][j].store_a(INF_ERA)
 
+    def reap_thread(self, tid: int) -> None:
+        """Clear a DEAD (joined) thread's reservations AND its slow-path
+        protocol state (reap-after-join safety argument: docs/schemes.md
+        next to Theorem 4, docs/robustness.md for the full taxonomy).
+
+        Beyond the base ``end_op``, WFE owes the helping protocol two
+        things a dead thread can no longer deliver:
+
+        * a published-but-unserved request (``result.ptr == INVPTR``)
+          would make ``counter_start != counter_end`` FOREVER, so every
+          future ``increment_era`` would rescan and re-help the fleet —
+          cancel it exactly as the dead requester would have
+          (lines 37-41): retract the request, bump the cycle tag, F&A
+          ``counter_end``.  If a live helper wins the ``wcas`` race and
+          serves the request first, the requester-side bookkeeping we
+          perform is identical to the dead thread adopting the output,
+          so the counters balance on both branches.
+        * ``clear`` resets only the application slots ``[0, max_hes)``;
+          a thread that died while HELPING someone may have left an era
+          in its two special slots, which would pin blocks forever — so
+          sweep all ``max_hes + 2`` slots.
+
+        One orphan is irrecoverable by design: a thread that died after
+        a helper served its request but before adopting the result
+        leaves ``counter_end`` one short.  That cannot be detected from
+        the cell (a served-and-adopted cell looks identical), and it is
+        benign: the imbalance only makes future ``increment_era`` calls
+        take the (correct, wait-free) helping scan, never blocks
+        reclamation.  Our crash points all sit outside ``get_protected``,
+        so the window is unreachable for injected faults.
+        """
+        for j in range(self.max_hes):
+            st = self.state[tid][j]
+            res = st.result.load()
+            if res[0] is INVPTR:
+                st.result.wcas(res, (None, INF_ERA))
+                self.reservations[tid][j].store_b(res[1] + 1)
+                self.counter_end.fa_add(1)
+        for j in range(self.max_hes + 2):
+            self.reservations[tid][j].store_a(INF_ERA)
+
     def flush(self, tid: int) -> None:
         self.cleanup(tid)
 

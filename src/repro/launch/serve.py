@@ -110,6 +110,12 @@ def main(argv=None) -> int:
                     help="HTTP port for --http (0 = ephemeral)")
     ap.add_argument("--host", default="127.0.0.1",
                     help="HTTP bind address for --http")
+    ap.add_argument("--fault-spec", default=None,
+                    help="arm deterministic fault injection (chaos mode), "
+                         "e.g. 'seed=0,crash_rate=0.01,max_crashes=3' or "
+                         "'crash_at=before_tick:5|after_dispatch:3' — see "
+                         "serve/faults.py FaultSpec.parse and "
+                         "docs/robustness.md")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -126,7 +132,10 @@ def main(argv=None) -> int:
                          block_size=args.block_size,
                          max_batch=args.max_batch, scheme=args.scheme,
                          n_shards=args.shards, merge_freq=args.merge_freq,
-                         max_threads=max(8, args.workers + 1),
+                         # chaos mode: every respawned worker burns a fresh
+                         # tid, so armed faults need real registry headroom
+                         max_threads=max(16 if args.fault_spec else 8,
+                                         args.workers + 2),
                          max_inflight=max(4, args.workers),
                          chunk_size=args.chunk_size,
                          token_budget=args.token_budget,
@@ -135,6 +144,11 @@ def main(argv=None) -> int:
                          prefix_caching=not args.no_prefix_cache,
                          kv_dtype=args.kv_dtype,
                          **smr_kwargs)
+    if args.fault_spec:
+        from repro.serve.faults import FaultInjector, FaultSpec
+        engine.set_fault_injector(FaultInjector(FaultSpec.parse(
+            args.fault_spec)))
+        print(f"fault injection armed: {args.fault_spec}")
     if args.http:
         import asyncio
 
@@ -178,9 +192,20 @@ def main(argv=None) -> int:
             if args.slo == "mix" else args.slo
         reqs.append(engine.submit(prompt, args.new_tokens, slo=slo))
     t0 = time.time()
-    if args.workers > 1:
+    if args.workers > 1 or args.fault_spec:
+        # chaos mode always runs under the runtime: only the supervisor
+        # can reap/requeue/respawn a crashed worker (engine.run would die
+        # with the first injected crash)
         runtime = ServeRuntime(engine, n_workers=args.workers)
         stats = runtime.serve()
+        if args.fault_spec:
+            lat = sorted(runtime.recovery_latencies)
+            p50 = 1e3 * lat[len(lat) // 2] if lat else None
+            print(f"chaos: crashes={len(runtime.crashed_tids)} "
+                  f"respawns={runtime.n_respawns} recovery p50 "
+                  f"{'-' if p50 is None else f'{p50:.1f} ms'} "
+                  f"failed={stats.get('failed', 0)} "
+                  f"requeues={stats.get('crash_requeues', 0)}")
     else:
         tid = engine.pool.register_thread()
         stats = engine.run(tid)

@@ -1,9 +1,11 @@
 """Serving runtime: continuous batching over the WFE-reclaimed block pool."""
 
 from .engine import ServeEngine
+from .faults import CRASH_POINTS, FaultInjector, FaultSpec, InjectedCrash
 from .frontend import Frontend
 from .paged_model import paged_decode_step, paged_prefill_chunk
 from .runtime import ServeRuntime
 
 __all__ = ["ServeEngine", "ServeRuntime", "Frontend", "paged_decode_step",
-           "paged_prefill_chunk"]
+           "paged_prefill_chunk", "FaultSpec", "FaultInjector",
+           "InjectedCrash", "CRASH_POINTS"]

@@ -229,6 +229,12 @@ class ServeEngine:
         else:
             self._shard_bases = [0]
             self._shard_sizes = [n_blocks]
+        # fault injection (serve/faults.py): None = disabled.  The plans a
+        # worker has dispatched-but-not-completed are tracked per tid so a
+        # supervisor can requeue them after the worker dies (the dispatch
+        # is synchronous — a dead worker holds no device read in flight).
+        self.faults = None
+        self._inflight_plans: Dict[int, object] = {}
         pad = 1 if pad_shapes else 0
         # one extra scratch slot per shard absorbs the KV writes of
         # batch-padding rows — it is never handed out by the block pool, so
@@ -288,6 +294,29 @@ class ServeEngine:
         return self.sched.submit(prompt, max_new_tokens, slo=slo,
                                  on_token=on_token, on_finish=on_finish)
 
+    # ------------------------------------------------------- fault injection
+    def set_fault_injector(self, injector) -> None:
+        """Install (or remove, with ``None``) a ``FaultInjector``.
+
+        Wires the allocation gate into every shard pool and arms the
+        crash/poison hooks in ``step``/``execute_plan``.  Call before
+        workers start; the hooks are read once per step without a lock.
+        """
+        self.faults = injector
+        shards = getattr(self.pool, "shards", None) or [self.pool]
+        gate = None if injector is None else injector.alloc_gate
+        for p in shards:
+            p._fault_alloc = gate
+
+    def take_orphaned_plan(self, tid: int):
+        """Pop the plan a (dead) worker dispatched but never completed.
+
+        Returns None when the worker died outside the
+        reservation-published window.  Supervisor-only: the worker must be
+        joined first, so no race with its own pop in ``step``.
+        """
+        return self._inflight_plans.pop(tid, None)
+
     def cancel(self, req) -> bool:
         """Abandon a request (client disconnect / DELETE): marks it; the
         scheduler drops it at the next safe point and releases its pages
@@ -301,10 +330,20 @@ class ServeEngine:
         Thread-safe: callable concurrently from several workers (each with
         its own registered ``tid``).
         """
+        faults = self.faults
+        if faults is not None:
+            faults.crash_point("before_tick", tid)
         plan = self.sched.tick(tid)
         if plan is None:
             return False
+        # track the plan across the reservation-held window: a crash
+        # anywhere between here and complete() leaves the entry behind
+        # for the supervisor's requeue (take_orphaned_plan)
+        self._inflight_plans[tid] = plan
+        if faults is not None:
+            faults.crash_point("after_reservation", tid)
         self.execute_plan(plan, tid)
+        self._inflight_plans.pop(tid, None)
         return True
 
     def execute_plan(self, plan, tid: int) -> np.ndarray:
@@ -319,7 +358,25 @@ class ServeEngine:
             sampled = self._dispatch_mixed(plan)
         else:
             sampled = self._dispatch_decode(plan)
-        self.sched.complete(plan, sampled, tid)
+        faults = self.faults
+        if faults is not None:
+            row = faults.poison_row(len(plan.requests))
+            if row is not None:
+                poisoned = np.asarray(sampled, dtype=np.float64).copy()
+                poisoned[row] = np.nan
+                sampled = poisoned
+            faults.crash_point("after_dispatch", tid)
+        failed_rows = None
+        arr = np.asarray(sampled)
+        if not np.issubdtype(arr.dtype, np.integer):
+            # graceful degradation: a non-finite sampled output (device
+            # fault, poisoned logits) fails THAT request, not the batch —
+            # surviving rows keep their (finite) tokens
+            finite = np.isfinite(arr)
+            if not finite.all():
+                failed_rows = [not bool(f) for f in finite]
+            sampled = np.where(finite, arr, 0).astype(np.int32)
+        self.sched.complete(plan, sampled, tid, failed_rows=failed_rows)
         return sampled
 
     def _bucket_width(self, plan, nblk: int, shard: int) -> int:
@@ -481,7 +538,8 @@ class ServeEngine:
     # ------------------------------------------------------------- run loops
     def run_worker(self, tid: int, max_steps: int = 10_000,
                    stop: Optional[threading.Event] = None,
-                   exit_when_idle: bool = True) -> int:
+                   exit_when_idle: bool = True,
+                   on_first_step=None) -> int:
         """Worker loop: step until the queue AND active set are empty.
 
         Used by every ``ServeRuntime`` worker thread; does NOT run the
@@ -492,6 +550,8 @@ class ServeEngine:
         front-end: an empty queue parks the worker on the scheduler's
         condition instead of exiting — new submissions (and cancellations)
         wake it — until ``stop`` is set by the runtime's rolling drain.
+        ``on_first_step`` fires once, after the first PRODUCTIVE step —
+        the supervisor stamps recovery latency with it.
         Returns the number of productive steps taken.
         """
         steps = 0
@@ -504,6 +564,8 @@ class ServeEngine:
             steps = steps + 1 if exit_when_idle else productive
             if self.step(tid):
                 productive += 1
+                if productive == 1 and on_first_step is not None:
+                    on_first_step()
                 idle = 0
                 continue
             if exit_when_idle and not self.sched.pending() \

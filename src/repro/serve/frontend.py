@@ -174,12 +174,21 @@ class Frontend:
 
     def _health(self) -> dict:
         sched = self.engine.sched
-        return {"pending": sched.pending(),
-                "active": len(sched.active),
-                "free_blocks": self.engine.pool.free_blocks,
-                "n_blocks": self.engine.pool.n_blocks,
-                "draining": self.runtime.draining,
-                "live_streams": len(self.requests)}
+        health = {"pending": sched.pending(),
+                  "active": len(sched.active),
+                  "free_blocks": self.engine.pool.free_blocks,
+                  "n_blocks": self.engine.pool.n_blocks,
+                  "draining": self.runtime.draining,
+                  "live_streams": len(self.requests),
+                  # crash tolerance: liveness per worker slot, respawn and
+                  # crash counters — a monitor alerting on alive=false or
+                  # a rising n_respawns sees degradation before an outage
+                  "workers": self.runtime.worker_status(),
+                  "n_respawns": self.runtime.n_respawns,
+                  "worker_crashes": len(self.runtime.crashed_tids)}
+        if self.engine.faults is not None:
+            health["faults"] = self.engine.faults.stats()
+        return health
 
     def _cancel_route(self, writer: asyncio.StreamWriter, path: str) -> None:
         try:
@@ -327,11 +336,17 @@ class Frontend:
                 else:
                     _, state, n_tokens, cancel_latency = item
                     finished = True
-                    writer.write(_sse("done", {
-                        "id": req.rid, "state": state, "n_tokens": n_tokens,
-                        "cancel_latency_ms":
-                            None if cancel_latency is None
-                            else round(1e3 * cancel_latency, 3)}))
+                    # graceful degradation: a request failed by the engine
+                    # (non-finite sampled output) terminates its stream
+                    # with an `error` frame — the batch, and every other
+                    # stream, carries on
+                    writer.write(_sse(
+                        "error" if state == "failed" else "done", {
+                            "id": req.rid, "state": state,
+                            "n_tokens": n_tokens,
+                            "cancel_latency_ms":
+                                None if cancel_latency is None
+                                else round(1e3 * cancel_latency, 3)}))
                     try:
                         await writer.drain()
                     except ConnectionError:
@@ -352,13 +367,20 @@ def _build_runtime(args) -> ServeRuntime:
     cfg = get_smoke_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
+    fault_spec = getattr(args, "fault_spec", None)
     engine = ServeEngine(cfg, params, n_blocks=args.n_blocks,
                          block_size=args.block_size,
                          max_batch=args.max_batch, scheme=args.scheme,
                          n_shards=args.shards, chunk_size=args.chunk_size,
-                         max_threads=max(8, args.workers + 1),
+                         # respawns burn fresh tids: leave real headroom
+                         # whenever faults are armed
+                         max_threads=max(16 if fault_spec else 8,
+                                         args.workers + 2),
                          max_inflight=max(4, args.workers),
                          era_freq=2, cleanup_freq=2)
+    if fault_spec:
+        from .faults import FaultInjector, FaultSpec
+        engine.set_fault_injector(FaultInjector(FaultSpec.parse(fault_spec)))
     return ServeRuntime(engine, n_workers=args.workers,
                         max_steps_per_worker=1_000_000)
 
@@ -383,7 +405,7 @@ async def _read_sse(reader, *, until_tokens: Optional[int] = None):
                 n_tokens += 1
                 if until_tokens is not None and n_tokens >= until_tokens:
                     return events
-            if event == "done":
+            if event in ("done", "error"):
                 return events
 
 
@@ -496,6 +518,10 @@ def main(argv=None) -> int:
     ap.add_argument("--chunk-size", type=int, default=8)
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--fault-spec", default=None,
+                    help="arm deterministic fault injection, e.g. "
+                         "'seed=0,crash_rate=0.01,max_crashes=3' "
+                         "(see serve/faults.py FaultSpec.parse)")
     ap.add_argument("--selftest", action="store_true",
                     help="boot on an ephemeral port, run the end-to-end "
                          "stream/cancel/drain smoke, exit 0 on PASS")

@@ -20,6 +20,29 @@
   reclaims every retired block (provably terminating — see
   ``ServeEngine.drain``; no magic round counts).
 
+Crash tolerance (docs/robustness.md): a worker that dies mid-step is a
+RECOVERABLE event, not a runtime abort.  The supervisor — inline in batch
+mode, a dedicated thread in persistent mode — detects the death
+(``Thread.is_alive`` plus the captured exception), joins the thread, and
+then, in order:
+
+1. **quarantines** the dead tid — it is never reused;
+2. **reaps** its era reservations via ``pool.reap_thread(tid)`` — safe
+   exactly because the thread is joined: a joined thread can never
+   publish, dereference, or retire again (reap-after-join argument next
+   to Theorem 4 in docs/schemes.md);
+3. **requeues** the plan it dispatched-but-never-completed through the
+   scheduler's ordinary eviction rewind (``requeue_crashed``) — greedy
+   decode makes the replay token-identical;
+4. **respawns** a replacement worker on a FRESH tid (bounded by
+   ``max_respawns`` and the scheme's tid headroom).
+
+Recovery latency — crash detected to the replacement's first productive
+step — lands in ``recovery_latencies`` (seconds).  An unrecoverable
+crash (budget or headroom exhausted) still stops the fleet, but every
+exit path now attempts the era-bounded drain first and parks the merged
+stats in ``partial_stats`` before re-raising.
+
 Two operating modes:
 
 * **batch** (``serve()``): run everything already submitted to
@@ -41,7 +64,8 @@ strand silently, which is exactly what the pre-fix runtime did.
 
 The runtime enforces ``max_threads`` headroom at construction so every
 worker (and the drain) can register a tid; the wait-free scheme registry
-is per-shard-consistent (``ShardedBlockPool.register_thread``).
+is per-shard-consistent (``ShardedBlockPool.register_thread``).  Leave
+extra headroom when faults are armed: every respawn burns a fresh tid.
 """
 
 from __future__ import annotations
@@ -57,45 +81,69 @@ __all__ = ["ServeRuntime"]
 
 class ServeRuntime:
     def __init__(self, engine: ServeEngine, *, n_workers: int = 2,
-                 max_steps_per_worker: int = 10_000):
+                 max_steps_per_worker: int = 10_000,
+                 max_respawns: Optional[int] = None,
+                 supervise_poll_s: float = 0.005):
         if n_workers < 1:
             raise ValueError("n_workers must be >= 1")
         self.engine = engine
         self.n_workers = n_workers
         self.max_steps_per_worker = max_steps_per_worker
+        #: respawn budget: None = unbounded (headroom still binds); 0
+        #: turns every crash into an unrecoverable one (tests use this to
+        #: exercise the error path's drain guarantee)
+        self.max_respawns = max_respawns
+        self.supervise_poll_s = supervise_poll_s
         self.worker_steps: List[int] = [0] * n_workers
         self.errors: List[BaseException] = []
+        # crash-tolerance telemetry (supervisor-writer only)
+        self.n_respawns = 0
+        self.crashed_tids: List[int] = []
+        self.worker_crashes: List[Dict[str, object]] = []
+        self.recovery_latencies: List[float] = []  # seconds, per respawn
+        #: stats snapshot from the last failed serve()/drain() — the
+        #: error path still drains and accounts before raising
+        self.partial_stats: Optional[Dict[str, object]] = None
+        self._worker_excs: List[Optional[BaseException]] = [None] * n_workers
         self._tids: Optional[List[int]] = None
-        # set when any worker dies: its in-flight requests would otherwise
-        # stall the survivors' idle loops until max_steps before the error
-        # surfaced from serve()
+        self._sup_tid: Optional[int] = None
+        self._sup_thread: Optional[threading.Thread] = None
+        self._exit_when_idle = True
+        # set on unrecoverable failure or drain: crashed-and-unrequeued
+        # requests would otherwise stall the survivors' idle loops until
+        # max_steps before the error surfaced from serve()
         self._stop = threading.Event()
         # persistent mode: the admission gate serializes submit() against
         # drain-begin — once _draining is set under the gate, no submission
         # can slip behind the exiting workers and strand
         self._gate = threading.Lock()
         self._draining = False
-        self._threads: List[threading.Thread] = []
+        self._threads: List[Optional[threading.Thread]] = []
 
     # ---------------------------------------------------------------- workers
     def _worker(self, wid: int, tid: int, barrier: threading.Barrier,
-                exit_when_idle: bool = True) -> None:
+                exit_when_idle: bool = True, on_first_step=None) -> None:
         try:
             barrier.wait()  # start together: contention from step one
             self.worker_steps[wid] = self.engine.run_worker(
                 tid, self.max_steps_per_worker, stop=self._stop,
-                exit_when_idle=exit_when_idle)
-        except BaseException as e:  # pragma: no cover - failure path
-            self.errors.append(e)
-            self._stop.set()  # abort the surviving workers promptly
+                exit_when_idle=exit_when_idle, on_first_step=on_first_step)
+        except BaseException as e:
+            # park the exception for the SUPERVISOR: it decides whether
+            # this is a recoverable crash (reap + requeue + respawn) or a
+            # fleet stop — a worker no longer aborts the runtime itself
+            self._worker_excs[wid] = e
 
-    def _spawn(self, exit_when_idle: bool) -> List[threading.Thread]:
+    def _spawn(self, exit_when_idle: bool) -> List[Optional[threading.Thread]]:
         engine = self.engine
         if self._tids is None:  # one tid per worker, ever
             self._tids = [engine.pool.register_thread()
                           for _ in range(self.n_workers)]
+        self._exit_when_idle = exit_when_idle
+        self._worker_excs = [None] * self.n_workers
+        self.worker_steps = [0] * self.n_workers
         barrier = threading.Barrier(self.n_workers)
-        threads = [
+        threads: List[Optional[threading.Thread]] = [
             threading.Thread(target=self._worker,
                              args=(w, tid, barrier, exit_when_idle),
                              name=f"serve-worker-{w}", daemon=True)
@@ -105,38 +153,149 @@ class ServeRuntime:
             t.start()
         return threads
 
+    # ------------------------------------------------------------ supervision
+    def _tid_headroom(self) -> int:
+        """Unregistered tids left in the scheme (min is per-shard-equal:
+        one registration covers every shard)."""
+        pool = self.engine.pool
+        smr = pool.shards[0].smr if hasattr(pool, "shards") else pool.smr
+        return smr.max_threads - smr.registered_threads
+
+    def _supervisor_tid(self) -> Optional[int]:
+        """Lazily register the supervisor's own tid (None when the scheme
+        registry is full).  Used for requeue accounting and the final
+        drain — the supervisor must never write stats under a dead tid."""
+        if self._sup_tid is None:
+            if self._tid_headroom() < 1:
+                return None
+            self._sup_tid = self.engine.pool.register_thread()
+        return self._sup_tid
+
+    def _drain_tid(self) -> int:
+        return self._sup_tid if self._sup_tid is not None else self._tids[0]
+
+    def _handle_crash(self, wid: int,
+                      exc: BaseException) -> Optional[threading.Thread]:
+        """Recover from worker ``wid``'s death (the thread is JOINED).
+
+        Order matters: reap FIRST (clears the dead tid's era reservations
+        — safe after join), then requeue the orphaned plan (the eviction
+        rewind's cleanup can then free the rewound pages immediately
+        instead of waiting a scan).  Returns the replacement thread, or
+        None when the crash is unrecoverable (errors + stop set) or the
+        runtime is already stopping.
+        """
+        t_detect = time.monotonic()
+        tid = self._tids[wid]
+        self.crashed_tids.append(tid)
+        self.worker_crashes.append(
+            {"wid": wid, "tid": tid, "error": repr(exc)})
+        sup = self._supervisor_tid()
+        self.engine.pool.reap_thread(tid)
+        plan = self.engine.take_orphaned_plan(tid)
+        if plan is not None and sup is not None:
+            self.engine.sched.requeue_crashed(plan, sup)
+        if self._stop.is_set():
+            return None  # fleet already stopping: recovered state, no respawn
+        exhausted = (self.max_respawns is not None
+                     and self.n_respawns >= self.max_respawns)
+        if exhausted or sup is None or self._tid_headroom() < 1:
+            self.errors.append(exc)
+            self._stop.set()
+            return None
+        new_tid = self.engine.pool.register_thread()
+        self._tids[wid] = new_tid
+        self.n_respawns += 1
+
+        def _on_first_step() -> None:
+            self.recovery_latencies.append(time.monotonic() - t_detect)
+
+        t = threading.Thread(
+            target=self._worker,
+            args=(wid, new_tid, threading.Barrier(1), self._exit_when_idle,
+                  _on_first_step),
+            name=f"serve-worker-{wid}r{self.n_respawns}", daemon=True)
+        self._threads[wid] = t
+        t.start()
+        return t
+
+    def _supervise(self) -> None:
+        """Watch the fleet: reap/requeue/respawn crashed workers; return
+        once every worker slot is dead and handled (batch mode: idle
+        exits; persistent mode: after ``drain`` sets the stop)."""
+        while True:
+            n_alive = 0
+            for wid in range(self.n_workers):
+                t = self._threads[wid]
+                if t is None:
+                    continue
+                if t.is_alive():
+                    n_alive += 1
+                    continue
+                t.join()  # dead: join BEFORE touching its state (reap safety)
+                self._threads[wid] = None
+                exc = self._worker_excs[wid]
+                self._worker_excs[wid] = None
+                if exc is None:
+                    continue  # clean idle/stop exit
+                if self._handle_crash(wid, exc) is not None:
+                    n_alive += 1
+            if n_alive == 0:
+                return
+            time.sleep(self.supervise_poll_s)
+
     def serve(self) -> Dict[str, object]:
         """Batch mode: run all submitted requests to completion; returns
         merged stats.
 
-        Spawns the workers, joins them once the queue and active set are
-        empty, then runs the final era-progress-bounded drain on one tid.
+        Spawns the workers and supervises them inline — crashed workers
+        are reaped, their in-flight requests requeued, and replacements
+        respawned — then runs the final era-progress-bounded drain on one
+        tid.  On an UNRECOVERABLE error the drain still runs and the
+        merged stats land in ``partial_stats`` before the raise.
         """
         self._stop.clear()  # fresh run; serve() may be called repeatedly
         t0 = time.perf_counter()
-        threads = self._spawn(exit_when_idle=True)
-        for t in threads:
-            t.join()
+        self._threads = self._spawn(exit_when_idle=True)
+        self._supervise()
         serve_dt = time.perf_counter() - t0  # tokens are all produced here
+        # drain UNCONDITIONALLY: even the error path must reap every
+        # reclaimable block and account what completed (satellite fix —
+        # the old path raised before draining and leaked the run)
+        unreclaimed = self.engine.drain(self._drain_tid())
+        stats = self._stats(serve_dt, time.perf_counter() - t0, unreclaimed)
         if self.errors:
+            self.partial_stats = stats
             raise self.errors[0]
-        # graceful drain: all workers are quiescent, every step completed
-        # and released its reservation — one bounded drain reclaims all
-        unreclaimed = self.engine.drain(self._tids[0])
-        return self._stats(serve_dt, time.perf_counter() - t0, unreclaimed)
+        return stats
 
     # ------------------------------------------------------- persistent mode
     @property
     def running(self) -> bool:
-        return any(t.is_alive() for t in self._threads)
+        return any(t is not None and t.is_alive() for t in list(self._threads))
 
     @property
     def draining(self) -> bool:
         return self._draining
 
+    def worker_status(self) -> List[Dict[str, object]]:
+        """Per-worker liveness snapshot (the /healthz payload)."""
+        out: List[Dict[str, object]] = []
+        for wid in range(self.n_workers):
+            t = self._threads[wid] if wid < len(self._threads) else None
+            out.append({
+                "wid": wid,
+                "tid": self._tids[wid] if self._tids is not None else None,
+                "alive": bool(t is not None and t.is_alive()),
+                "steps": self.worker_steps[wid],
+            })
+        return out
+
     def start(self) -> "ServeRuntime":
         """Spawn persistent workers: idle workers park on the scheduler's
-        condition and serve submissions as they arrive, until ``drain``."""
+        condition and serve submissions as they arrive, until ``drain``.
+        A supervisor thread watches the fleet and respawns crashed
+        workers (see the module docstring)."""
         if self.running:
             raise RuntimeError("ServeRuntime is already running")
         with self._gate:
@@ -144,6 +303,9 @@ class ServeRuntime:
         self._stop.clear()
         self._t0 = time.perf_counter()
         self._threads = self._spawn(exit_when_idle=False)
+        self._sup_thread = threading.Thread(
+            target=self._supervise, name="serve-supervisor", daemon=True)
+        self._sup_thread.start()
         return self
 
     def submit(self, prompt, max_new_tokens: int, slo: str = "interactive",
@@ -179,7 +341,9 @@ class ServeRuntime:
         every queued and active request is cancelled; queued ones finalize
         in place, active ones at their next tick/completion — pages
         release through the refcount/era path, never a force-retire)
-        ``-> workers joined -> reclamation drain``.
+        ``-> workers joined -> reclamation drain``.  The reclamation
+        drain runs on EVERY exit path — an unrecoverable worker error
+        raises only after it, with the stats in ``partial_stats``.
         """
         with self._gate:
             already = self._draining
@@ -203,16 +367,23 @@ class ServeRuntime:
         self._stop.set()
         with sched._work:  # wake parked workers to observe the stop
             sched._work.notify_all()
-        for t in self._threads:
-            t.join()
+        sup = self._sup_thread
+        if sup is not None:
+            sup.join()  # the supervisor joins (and handles) every worker
+            self._sup_thread = None
+        else:
+            for t in self._threads:
+                if t is not None:
+                    t.join()
         self._threads = []
-        if self.errors:
-            raise self.errors[0]
         serve_dt = time.perf_counter() - getattr(self, "_t0",
                                                  time.perf_counter())
-        unreclaimed = self.engine.drain(self._tids[0])
+        unreclaimed = self.engine.drain(self._drain_tid())
         stats = self._stats(serve_dt, serve_dt, unreclaimed)
         stats["cancelled_at_deadline"] = cancelled_at_deadline
+        if self.errors:
+            self.partial_stats = stats
+            raise self.errors[0]
         return stats
 
     # ----------------------------------------------------------------- stats
@@ -224,4 +395,6 @@ class ServeRuntime:
         stats["unreclaimed"] = unreclaimed
         stats["n_workers"] = self.n_workers
         stats["worker_steps"] = list(self.worker_steps)
+        stats["n_respawns"] = self.n_respawns
+        stats["worker_crashes"] = len(self.crashed_tids)
         return stats
